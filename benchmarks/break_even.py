@@ -1,0 +1,81 @@
+"""Paper §4.2: the break-even bandwidth equation, validated against the
+simulated pipeline (the "modeling twist").
+
+  B* = 32 X^2 (1 - K/(4*2^(2n))) / j
+
+Checks (a) the paper's Pi-Zero number (~50.4 Mb/s), (b) that the netsim
+crossover lands at the predicted B* for a sweep of configurations, and
+(c) the pod-boundary generalisation for the assigned LLMs.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.latency import (PodSplitConfig, SplitConfig,
+                                break_even_bandwidth,
+                                pod_break_even_bandwidth,
+                                paper_pi_zero_config)
+from repro.serving.client import DecisionLoop
+from repro.serving.netsim import ShapedLink
+
+
+def crossover_mbps(cfg: SplitConfig, *, lo=1e5, hi=1e10) -> float:
+    """Bisection on the simulated pipelines for the latency crossover."""
+    def diff(bps):
+        link = lambda: ShapedLink(bandwidth_bps=bps, propagation_s=0.0)
+        so = DecisionLoop(link=link(), server_time_s=0.0, split=False,
+                          payload_bytes=cfg.frame_bytes, action_bytes=0)
+        sp = DecisionLoop(link=link(), server_time_s=0.0, split=True,
+                          edge_time_s=cfg.encode_time_s,
+                          payload_bytes=cfg.feature_bytes, action_bytes=0)
+        return sp.decision_latency() - so.decision_latency()
+    for _ in range(80):
+        mid = (lo + hi) / 2
+        if diff(mid) < 0:
+            lo = mid
+        else:
+            hi = mid
+    return mid / 1e6
+
+
+def run():
+    paper = paper_pi_zero_config()
+    b_star = break_even_bandwidth(paper) / 1e6
+    sim = crossover_mbps(paper)
+    print(f"  paper config: predicted B*={b_star:.1f} Mb/s "
+          f"(paper: 50.4), simulated crossover={sim:.1f} Mb/s")
+    rows = [{"config": "paper", "pred": b_star, "sim": sim}]
+    for x, n, k, j in ((256, 2, 4, 0.05), (512, 3, 16, 0.2),
+                       (84, 3, 4, 0.01)):
+        cfg = SplitConfig(x, n, k, j)
+        p = break_even_bandwidth(cfg) / 1e6
+        s = crossover_mbps(cfg)
+        rows.append({"config": f"X{x}n{n}K{k}", "pred": p, "sim": s})
+        print(f"  X={x} n={n} K={k} j={j}: predicted {p:.1f} "
+              f"simulated {s:.1f} Mb/s")
+        assert abs(p - s) / p < 0.02, "equation disagrees with simulation"
+
+    # pod-boundary generalisation: int8 wire on the hidden state vs bf16
+    print("  pod-boundary break-even (edge stage = 1/4 of layers, "
+          "int8 wire vs bf16 baseline):")
+    for arch_id in ("llama3-8b", "qwen3-0.6b"):
+        cfg = ARCHS[arch_id]
+        hidden = 32 * 1024 * cfg.d_model * 4        # (B=32, S=1k) fp32
+        pod = PodSplitConfig(hidden_bytes_full=hidden, wire_itemsize=1.0,
+                             edge_time_s=0.004,
+                             raw_bytes=hidden // 2)  # bf16 baseline
+        print(f"    {arch_id:<12} B*={pod_break_even_bandwidth(pod)/1e9:.1f}"
+              f" Gb/s (DCN-relevant)")
+    return rows
+
+
+def main(argv=None):
+    argparse.ArgumentParser(description=__doc__).parse_args(argv)
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Paper Table 5: end-to-end decision latency under bandwidth shaping.
+
+Median over N decisions of (observation available -> action received),
+server-only (full RGBA frame transmitted, Full-CNN + head on the server)
+vs split-policy (MiniConv on-device, K=4 uint8 features transmitted).
+Compute-stage times are measured on this host with the real jitted
+networks; the link is the deterministic token-bucket shaper.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.miniconv import (miniconv_feature_shape, standard_spec)
+from repro.core.wire import frame_bytes_rgba, get_codec
+from repro.rl.networks import (full_cnn_apply, full_cnn_init,
+                               miniconv_edge_apply, miniconv_encoder_init,
+                               miniconv_server_apply, mlp_apply, mlp_init)
+from repro.serving.client import DecisionLoop, EdgeClient
+from repro.serving.netsim import shaped
+from repro.serving.server import PolicyServer
+
+X_SIZE = 84           # paper's task-scale observation (84x84, 3 frames)
+C_IN = 12             # RGBA x 3 stacked frames at the upload boundary
+
+
+def build(*, k: int = 4, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    spec = standard_spec(c_in=C_IN, k=k)
+    enc = miniconv_encoder_init(key, spec, h=X_SIZE, w=X_SIZE)
+    cnn = full_cnn_init(key, C_IN, h=X_SIZE, w=X_SIZE)
+    head = mlp_init(key, [512, 256, 3])
+    codec = get_codec("uint8")
+    fh, fw, fc = miniconv_feature_shape(spec, X_SIZE, X_SIZE)
+
+    @jax.jit
+    def edge_fn(obs):
+        return codec.encode(miniconv_edge_apply(enc["edge"], spec, obs))
+
+    @jax.jit
+    def split_server_fn(payload):
+        feats = codec.decode(payload)
+        z = miniconv_server_apply(enc["server"], feats)
+        return mlp_apply(head, z)
+
+    @jax.jit
+    def mono_server_fn(obs):
+        return mlp_apply(head, full_cnn_apply(cnn, obs))
+
+    obs = jax.random.uniform(key, (1, X_SIZE, X_SIZE, C_IN))
+    wire_bytes = codec.wire_bytes((1, fh, fw, fc))
+    frame_bytes = frame_bytes_rgba(X_SIZE) * 3      # 3 stacked RGBA frames
+    return edge_fn, split_server_fn, mono_server_fn, obs, wire_bytes, \
+        frame_bytes
+
+
+def run(bandwidths=(10, 25, 50, 100), *, n_decisions: int = 1000,
+        k: int = 4):
+    (edge_fn, split_srv, mono_srv, obs, wire_bytes,
+     frame_bytes) = build(k=k)
+    client = EdgeClient(encode_fn=edge_fn, wire_bytes=wire_bytes)
+    j = client.measure(obs)
+    payload = edge_fn(obs)
+    s_split = PolicyServer(serve_fn=split_srv).measure(payload)
+    s_mono = PolicyServer(serve_fn=mono_srv).measure(obs)
+    print(f"  stages: edge={j*1e3:.2f}ms split_srv={s_split*1e3:.2f}ms "
+          f"mono_srv={s_mono*1e3:.2f}ms wire={wire_bytes}B "
+          f"frame={frame_bytes}B")
+
+    rows = []
+    for mbps in bandwidths:
+        so = DecisionLoop(link=shaped(mbps), server_time_s=s_mono,
+                          split=False, payload_bytes=frame_bytes)
+        sp = DecisionLoop(link=shaped(mbps), server_time_s=s_split,
+                          split=True, edge_time_s=j,
+                          payload_bytes=wire_bytes)
+        row = {"mbps": mbps,
+               "server_only_ms": so.median_latency(n_decisions) * 1e3,
+               "split_ms": sp.median_latency(n_decisions) * 1e3}
+        rows.append(row)
+        print(f"  {mbps:>5} Mb/s  server-only {row['server_only_ms']:7.1f} "
+              f"ms   split {row['split_ms']:7.1f} ms")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bandwidths", default="10,25,50,100")
+    ap.add_argument("--decisions", type=int, default=1000)
+    ap.add_argument("--k", type=int, default=4)
+    args = ap.parse_args(argv)
+    run(tuple(float(b) for b in args.bandwidths.split(",")),
+        n_decisions=args.decisions, k=args.k)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Figure 2: per-frame encoder processing time vs input size.
+
+Mean of N consecutive inferences with standard deviation, swept over
+input sizes.  Two execution paths stand in for the paper's device matrix:
+``compiled`` (jit / XLA — the embedded-GPU shader analogue) and
+``interpret`` (the Pallas kernel body executed in Python — the weak-CPU
+analogue).  5 FPS feasibility per size is derived like the paper's
+Pi-Zero X<500 observation.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.miniconv import miniconv_apply, miniconv_init, standard_spec
+
+
+def time_frames(fn, x, *, n: int = 20) -> tuple[float, float]:
+    fn(x)                                    # compile / warm
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        ts.append(time.perf_counter() - t0)
+    return float(np.mean(ts)), float(np.std(ts))
+
+
+def run(sizes=(64, 128, 256, 400), *, k: int = 4, n: int = 20,
+        include_interpret: bool = False):
+    spec = standard_spec(c_in=4, k=k)
+    params = miniconv_init(jax.random.PRNGKey(0), spec)
+    rows = []
+    for x_size in sizes:
+        x = jax.random.uniform(jax.random.PRNGKey(1), (1, x_size, x_size, 4))
+        compiled = jax.jit(lambda x: miniconv_apply(params, spec, x))
+        mean_c, std_c = time_frames(compiled, x, n=n)
+        row = {"x": x_size, "compiled_ms": mean_c * 1e3,
+               "compiled_std_ms": std_c * 1e3,
+               "fps5_ok": mean_c < 0.2}
+        if include_interpret:
+            interp = lambda x: miniconv_apply(params, spec, x,
+                                              use_kernel=True)
+            mean_i, std_i = time_frames(interp, x, n=max(n // 10, 2))
+            row["interpret_ms"] = mean_i * 1e3
+        rows.append(row)
+        print("  " + " ".join(f"{k}={v:.2f}" if isinstance(v, float)
+                              else f"{k}={v}" for k, v in row.items()))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="64,128,256,400")
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--interpret", action="store_true")
+    args = ap.parse_args(argv)
+    run(tuple(int(s) for s in args.sizes.split(",")), k=args.k,
+        include_interpret=args.interpret)
+
+
+if __name__ == "__main__":
+    main()

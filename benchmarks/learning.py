@@ -1,0 +1,49 @@
+"""Paper Tables 2-4: learning performance per (task, algorithm) with the
+three encoder conditions (MiniConv K=4, K=16, Full-CNN).
+
+The pure-JAX environments are simplified (DESIGN.md §4), so absolute
+returns are not comparable to the paper; the benchmark reproduces the
+comparison STRUCTURE — within-task Best/Mean/Final per encoder — and the
+tooling.  Default is smoke scale; pass ``--full`` for long runs.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.rl.train import train
+
+ENCODERS = ("miniconv4", "miniconv16", "full_cnn")
+TASKS = ("walker", "hopper", "pendulum")     # PPO / SAC / DDPG per paper
+
+
+def run(*, total_steps: int = 512, tasks=TASKS, encoders=ENCODERS,
+        seed: int = 0, verbose: bool = False):
+    rows = []
+    for task in tasks:
+        for enc in encoders:
+            res = train(task, enc, total_steps=total_steps, seed=seed,
+                        verbose=verbose)
+            rows.append(res)
+            print(f"  {task:<10} {res.algo:<5} {enc:<11} "
+                  f"best={res.best:8.1f} final={res.final:8.1f} "
+                  f"mean={res.mean:8.1f} episodes={len(res.episode_returns)}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=512)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (hours on CPU)")
+    ap.add_argument("--tasks", default=",".join(TASKS))
+    args = ap.parse_args(argv)
+    steps = 200_000 if args.full else args.steps
+    print("task,algo,encoder,best,final,mean,episodes")
+    rows = run(total_steps=steps, tasks=args.tasks.split(","))
+    for r in rows:
+        print(f"{r.task},{r.algo},{r.encoder},{r.best:.1f},{r.final:.1f},"
+              f"{r.mean:.1f},{len(r.episode_returns)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""§Roofline table: renders the dry-run sweep results (JSONL emitted by
+repro.launch.dryrun) as the per-(arch x shape x mesh) roofline table used
+in EXPERIMENTS.md, with the dominant-term classification and the
+MODEL_FLOPS utilisation ratio."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+HEADER = (f"{'arch':<24} {'shape':<12} {'mesh':<7} {'compute_s':>10} "
+          f"{'memory_s':>10} {'coll_s':>9} {'bottleneck':<11} "
+          f"{'useful':>7} {'peak/dev':>9}")
+
+
+def load(paths):
+    rows = []
+    seen = {}
+    for path in paths:
+        for line in open(path):
+            d = json.loads(line)
+            if "error" in d:
+                continue
+            key = (d["arch"], d["shape"], d["mesh"],
+                   json.dumps(d.get("overrides", {}), sort_keys=True))
+            seen[key] = d           # later rows win (re-runs)
+    rows = sorted(seen.values(),
+                  key=lambda d: (d["arch"], d["shape"], d["mesh"]))
+    return rows
+
+
+def render(rows, *, only_baseline: bool = True):
+    print(HEADER)
+    for d in rows:
+        if only_baseline and d.get("overrides"):
+            continue
+        peak = (d.get("peak_memory_bytes") or 0) / 2 ** 30
+        print(f"{d['arch']:<24} {d['shape']:<12} {d['mesh']:<7} "
+              f"{d['compute_s']:>10.4f} {d['memory_s']:>10.4f} "
+              f"{d['collective_s']:>9.4f} {d['bottleneck']:<11} "
+              f"{d['useful_flops_ratio']:>7.3f} {peak:>8.2f}G")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--glob", default="results/dryrun_*.jsonl")
+    ap.add_argument("--all", action="store_true",
+                    help="include override (perf-iteration) rows")
+    args = ap.parse_args(argv)
+    paths = sorted(glob.glob(args.glob))
+    if not paths:
+        print(f"no dry-run results match {args.glob}; run "
+              f"python -m repro.launch.dryrun --all --mesh both --out ...")
+        return
+    render(load(paths), only_baseline=not args.all)
+
+
+if __name__ == "__main__":
+    main()

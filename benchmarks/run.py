@@ -1,0 +1,76 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+Prints ``name,metric,value`` CSV rows after each section so the output is
+machine-readable (bench_output.txt).  Smoke-scale by default — each
+section's module exposes a CLI with ``--full`` / size flags for
+paper-scale runs.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def section(title):
+    print(f"\n==== {title} " + "=" * max(0, 60 - len(title)))
+
+
+def main() -> None:
+    t0 = time.time()
+    csv: list[tuple[str, str, float]] = []
+
+    section("Table 2-4: learning (smoke scale)")
+    from benchmarks import learning
+    rows = learning.run(total_steps=512, tasks=("pendulum",),
+                        encoders=("miniconv4", "full_cnn"))
+    for r in rows:
+        csv.append((f"learning/{r.task}/{r.encoder}", "final_return",
+                    r.final))
+
+    section("Figure 2: per-frame time vs input size")
+    from benchmarks import frame_time
+    for row in frame_time.run(sizes=(64, 128, 256), n=10):
+        csv.append((f"frame_time/x{row['x']}", "compiled_ms",
+                    row["compiled_ms"]))
+
+    section("Figure 3: sustained inference")
+    from benchmarks import sustained
+    out = sustained.run(n_frames=100, x_size=128)
+    for name, d in out.items():
+        csv.append((f"sustained/{name}", "mean_ms", d["mean_ms"]))
+        csv.append((f"sustained/{name}", "drift_pct", d["drift_pct"]))
+
+    section("Table 5: decision latency under bandwidth shaping")
+    from benchmarks import decision_latency
+    for row in decision_latency.run(n_decisions=200):
+        csv.append((f"latency/{row['mbps']:g}mbps", "server_only_ms",
+                    row["server_only_ms"]))
+        csv.append((f"latency/{row['mbps']:g}mbps", "split_ms",
+                    row["split_ms"]))
+
+    section("Table 6: server scalability")
+    from benchmarks import scalability
+    rows6 = scalability.run(n_max=128)
+    for name, n in rows6.items():
+        csv.append((f"scalability/{name}", "max_clients", float(n)))
+
+    section("Eq. 1: break-even bandwidth")
+    from benchmarks import break_even
+    for row in break_even.run():
+        csv.append((f"break_even/{row['config']}", "pred_mbps",
+                    row["pred"]))
+        csv.append((f"break_even/{row['config']}", "sim_mbps", row["sim"]))
+
+    section("Roofline table (from dry-run artifacts, if present)")
+    from benchmarks import roofline_table
+    roofline_table.main([])
+
+    section("CSV")
+    print("name,metric,value")
+    for name, metric, value in csv:
+        print(f"{name},{metric},{value:.4f}")
+    print(f"\ntotal bench time {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table 6: server scalability at a fixed decision rate.
+
+Max concurrent clients a single server sustains at 10 Hz within a p95
+decision-latency budget of 100 ms, server-only vs split-policy.  Service
+times are measured on this host from the real jitted networks; queueing
+is the deterministic FIFO simulation.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.decision_latency import build
+from repro.serving.netsim import shaped
+from repro.serving.server import PolicyServer, QueueSim
+
+
+def run(*, mbps: float = 100.0, rate_hz: float = 10.0,
+        budget_ms: float = 100.0, n_max: int = 256):
+    (edge_fn, split_srv, mono_srv, obs, wire_bytes,
+     frame_bytes) = build()
+    payload = edge_fn(obs)
+    s_split = PolicyServer(serve_fn=split_srv).measure(payload)
+    s_mono = PolicyServer(serve_fn=mono_srv).measure(obs)
+
+    rows = {}
+    for name, svc, payload_bytes in (
+            ("server_only", s_mono, frame_bytes),
+            ("split_policy", s_split, wire_bytes)):
+        sim = QueueSim(service_time_s=svc, uplink=shaped(mbps),
+                       payload_bytes=payload_bytes, rate_hz=rate_hz,
+                       horizon_s=5.0)
+        rows[name] = sim.max_clients(p95_budget_s=budget_ms / 1e3,
+                                     n_max=n_max)
+        print(f"  {name:<13} service={svc*1e3:6.2f}ms payload="
+              f"{payload_bytes:>7}B -> {rows[name]:>4} clients "
+              f"@ {rate_hz:.0f}Hz p95<{budget_ms:.0f}ms")
+    ratio = rows["split_policy"] / max(rows["server_only"], 1)
+    print(f"  scaling factor: {ratio:.1f}x (paper: 12 -> 36 = 3.0x)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mbps", type=float, default=100.0)
+    ap.add_argument("--budget-ms", type=float, default=100.0)
+    args = ap.parse_args(argv)
+    run(mbps=args.mbps, budget_ms=args.budget_ms)
+
+
+if __name__ == "__main__":
+    main()

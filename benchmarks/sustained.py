@@ -1,0 +1,66 @@
+"""Paper Figure 3: sustained inference over many consecutive frames.
+
+Reports per-frame time drift over a long run (the paper observes Jetson
+thermal throttling and CPU-vs-GPU stability on the Pi Zero).  Thermal
+state does not exist here; the reproducible part is the *stability*
+comparison between an op-by-op interpreted path (the paper's CPU/PyTorch
+condition) and the compiled path (the OpenGL condition), plus drift
+detection over the horizon.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.miniconv import miniconv_apply, miniconv_init, standard_spec
+
+
+def sustained(fn, x, n_frames: int) -> np.ndarray:
+    fn(x)
+    ts = np.empty(n_frames)
+    for i in range(n_frames):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        ts[i] = time.perf_counter() - t0
+    return ts
+
+
+def run(*, n_frames: int = 200, x_size: int = 128, k: int = 4):
+    spec = standard_spec(c_in=4, k=k)
+    params = miniconv_init(jax.random.PRNGKey(0), spec)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (1, x_size, x_size, 4))
+
+    compiled = jax.jit(lambda x: miniconv_apply(params, spec, x))
+    eager = lambda x: miniconv_apply(params, spec, x)   # op-by-op dispatch
+
+    out = {}
+    for name, fn, n in (("compiled", compiled, n_frames),
+                        ("eager", eager, max(n_frames // 10, 10))):
+        ts = sustained(fn, x, n)
+        head, tail = ts[: n // 4].mean(), ts[-n // 4:].mean()
+        out[name] = {
+            "mean_ms": ts.mean() * 1e3, "p99_ms":
+                float(np.percentile(ts, 99) * 1e3),
+            "drift_pct": 100.0 * (tail - head) / head,
+            "cv_pct": 100.0 * ts.std() / ts.mean(),
+        }
+        print(f"  {name:<9} mean={out[name]['mean_ms']:.3f}ms "
+              f"p99={out[name]['p99_ms']:.3f}ms "
+              f"drift={out[name]['drift_pct']:+.1f}% "
+              f"cv={out[name]['cv_pct']:.1f}%")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--frames", type=int, default=200)
+    ap.add_argument("--size", type=int, default=128)
+    args = ap.parse_args(argv)
+    run(n_frames=args.frames, x_size=args.size)
+
+
+if __name__ == "__main__":
+    main()

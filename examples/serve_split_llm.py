@@ -1,0 +1,70 @@
+"""Split-serving an assigned LLM across a bandwidth-shaped link with
+batched requests — the paper's architecture generalised to the
+pod-boundary setting (DESIGN.md §2), plus the wire-codec ablation.
+
+  PYTHONPATH=src python examples/serve_split_llm.py --arch qwen3-0.6b
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.wire import CODECS, get_codec
+from repro.models.registry import get_model
+from repro.serving.netsim import shaped
+from repro.serving.server import PolicyServer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-0.6b")
+    ap.add_argument("--edge-segments", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=8, help="requests/batch")
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    cfg, model = get_model(args.arch, reduced=True)
+    if cfg.family == "audio":
+        raise SystemExit("enc-dec archs use the natural encoder/decoder "
+                         "split; see DESIGN.md §5")
+    params = model.init(jax.random.PRNGKey(0))
+    edge_p, server_p = model.split_params(params, args.edge_segments)
+    B, S = args.batch, args.seq
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 3,
+                                cfg.vocab)
+    hidden = model.edge_forward(edge_p, tokens)
+    hshape = hidden.shape
+    print(f"{args.arch}: boundary activation {hshape} "
+          f"({np.prod(hshape)*4/1e6:.2f} MB fp32) for {B} batched requests")
+
+    # reference output for quality accounting
+    ref = model.server_forward(server_p, hidden).astype(jnp.float32)
+
+    print(f"\n{'codec':<14} {'wire MB':>8} {'tx@1Gb/s ms':>12} "
+          f"{'server ms':>10} {'top1 agree':>11} {'max |dlogit|':>13}")
+    for name in sorted(CODECS):
+        codec = get_codec(name)
+        payload = codec.encode(hidden)
+        wire = codec.wire_bytes(hshape)
+
+        @jax.jit
+        def serve(payload):
+            h = codec.decode(payload, dtype=cfg.jnp_dtype)
+            return model.server_forward(server_p, h)
+
+        t = PolicyServer(serve).measure(payload)
+        out = serve(payload).astype(jnp.float32)
+        agree = float((out.argmax(-1) == ref.argmax(-1)).mean())
+        dmax = float(jnp.abs(out - ref).max())
+        link = shaped(1000)   # 1 Gb/s DCN-class link
+        print(f"{name:<14} {wire/1e6:>8.2f} {link.tx_time(wire)*1e3:>12.2f} "
+              f"{t*1e3:>10.1f} {agree:>11.3f} {dmax:>13.3f}")
+
+    print("\nthe uint8/int8 rows are the paper's insight at the pod "
+          "boundary: 4x less DCN traffic for negligible logit change.")
+
+
+if __name__ == "__main__":
+    main()

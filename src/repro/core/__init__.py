@@ -1,0 +1,24 @@
+"""Core: the paper's contribution — MiniConv encoders, the split-policy
+architecture, wire codecs, and the decision-latency model."""
+
+from repro.core.latency import (LinkModel, SplitConfig, break_even_bandwidth,
+                                decision_latency_server_only,
+                                decision_latency_split,
+                                paper_pi_zero_config)
+from repro.core.miniconv import (MiniConvSpec, LayerSpec, ShaderBudget,
+                                 PI_ZERO_BUDGET, miniconv_apply,
+                                 miniconv_feature_shape, miniconv_init,
+                                 standard_spec)
+from repro.core.split import SplitModel, make_split_policy, straight_through
+from repro.core.wire import (CODECS, WireCodec, feature_bytes,
+                             frame_bytes_rgba, get_codec, roundtrip)
+
+__all__ = [
+    "LinkModel", "SplitConfig", "break_even_bandwidth",
+    "decision_latency_server_only", "decision_latency_split",
+    "paper_pi_zero_config", "MiniConvSpec", "LayerSpec", "ShaderBudget",
+    "PI_ZERO_BUDGET", "miniconv_apply", "miniconv_feature_shape",
+    "miniconv_init", "standard_spec", "SplitModel", "make_split_policy",
+    "straight_through", "CODECS", "WireCodec", "feature_bytes",
+    "frame_bytes_rgba", "get_codec", "roundtrip",
+]

@@ -1,0 +1,197 @@
+"""MiniConv: a library of small convolutional encoders that compile cleanly
+to per-pass execution under embedded-GPU ("fragment shader") constraints.
+
+The paper's constraint model (retained verbatim, §3):
+
+* one pass writes exactly 4 output channels (RGBA texture);
+* a pass may bind at most 8 input textures => C_in <= 32 per pass;
+* a pass has a finite per-pixel sampling budget (64 samples in the paper's
+  Pi Zero 2 W deployment): ``k_h * k_w * ceil(C_in / 4) <= 64``.
+
+On TPU these become VMEM-tiling constraints for the Pallas kernel
+(`repro.kernels.miniconv_pass`): a pass is one kernel invocation whose
+input block holds ceil(C_in/4) packed 4-channel planes and whose output
+tile is one 4-channel plane.  ``MiniConvSpec.validate()`` enforces the
+budget so that any encoder built here is deployable on both substrates.
+
+Encoders are trained end-to-end with the downstream policy (PyTorch in the
+paper, `repro.rl` here); at deployment only the encoder runs on-device and
+its K-channel uint8 feature map crosses the network (`repro.core.wire`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import conv2d, conv2d_init
+from repro.nn.module import KeyGen
+
+
+# ---------------------------------------------------------------------------
+# Constraint model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShaderBudget:
+    """Embedded-GPU constraints a MiniConv pass must respect (paper §3)."""
+
+    max_textures: int = 8        # bound input textures per pass
+    channels_per_texture: int = 4  # RGBA packing
+    max_samples: int = 64        # texture samples per output pixel
+    out_channels_per_pass: int = 4  # one RGBA render target
+
+    @property
+    def max_in_channels(self) -> int:
+        return self.max_textures * self.channels_per_texture
+
+    def samples(self, kernel: int, c_in: int) -> int:
+        textures = math.ceil(c_in / self.channels_per_texture)
+        return kernel * kernel * textures
+
+    def check_pass(self, kernel: int, c_in: int) -> list[str]:
+        errs = []
+        if c_in > self.max_in_channels:
+            errs.append(
+                f"pass reads {c_in} channels > {self.max_in_channels} "
+                f"({self.max_textures} textures x {self.channels_per_texture})")
+        s = self.samples(kernel, c_in)
+        if s > self.max_samples:
+            errs.append(
+                f"pass needs {s} samples/pixel "
+                f"({kernel}x{kernel} x {math.ceil(c_in / 4)} textures) "
+                f"> budget {self.max_samples}")
+        return errs
+
+
+PI_ZERO_BUDGET = ShaderBudget()  # the paper's Raspberry Pi Zero 2 W numbers
+
+
+# ---------------------------------------------------------------------------
+# Encoder specification
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One conv layer = ceil(c_out/4) shader passes over the same input."""
+
+    kernel: int
+    stride: int
+    c_in: int
+    c_out: int
+    activation: str = "relu"    # relu | sigmoid | linear
+
+    @property
+    def n_passes(self) -> int:
+        return math.ceil(self.c_out / 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class MiniConvSpec:
+    layers: tuple[LayerSpec, ...]
+    budget: ShaderBudget = PI_ZERO_BUDGET
+
+    @property
+    def k_out(self) -> int:
+        return self.layers[-1].c_out
+
+    @property
+    def n_stride2(self) -> int:
+        return sum(1 for l in self.layers if l.stride == 2)
+
+    @property
+    def total_passes(self) -> int:
+        return sum(l.n_passes for l in self.layers)
+
+    def validate(self) -> None:
+        errs: list[str] = []
+        for i, l in enumerate(self.layers):
+            for e in self.budget.check_pass(l.kernel, l.c_in):
+                errs.append(f"layer {i}: {e}")
+            if i and l.c_in != self.layers[i - 1].c_out:
+                errs.append(f"layer {i}: c_in {l.c_in} != previous c_out "
+                            f"{self.layers[i - 1].c_out}")
+        if errs:
+            raise ValueError("MiniConvSpec violates shader budget:\n  " +
+                             "\n  ".join(errs))
+
+    def out_spatial(self, x: int) -> int:
+        for l in self.layers:
+            x = math.ceil(x / l.stride)
+        return x
+
+    def feature_bytes(self, x: int) -> int:
+        """Transmitted feature bytes for an X-by-X input (uint8 wire)."""
+        s = self.out_spatial(x)
+        return s * s * self.k_out
+
+    def flops_per_frame(self, x: int) -> int:
+        total, h = 0, x
+        for l in self.layers:
+            h = math.ceil(h / l.stride)
+            total += 2 * h * h * l.kernel * l.kernel * l.c_in * l.c_out
+        return total
+
+
+def standard_spec(c_in: int = 12, k: int = 4, *, n_stride2: int = 3,
+                  hidden: int = 16,
+                  budget: ShaderBudget = PI_ZERO_BUDGET) -> MiniConvSpec:
+    """The encoder family used in the paper's experiments.
+
+    Defaults give the K=4, n=3 Pi-Zero configuration: three stride-2 layers,
+    4x4 then 3x3 kernels, every pass within the 64-sample budget:
+      4x4 x ceil(12/4)=3 textures = 48 samples; 3x3 x 4 = 36 samples.
+    """
+    layers = [LayerSpec(4, 2, c_in, hidden)]
+    for _ in range(n_stride2 - 2):
+        layers.append(LayerSpec(3, 2, hidden, hidden))
+    layers.append(LayerSpec(3, 2, hidden, k, activation="sigmoid"))
+    spec = MiniConvSpec(tuple(layers), budget)
+    spec.validate()
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# init / apply
+# ---------------------------------------------------------------------------
+
+def miniconv_init(key, spec: MiniConvSpec, *, dtype=jnp.float32):
+    kg = KeyGen(key)
+    return {f"layer{i}": conv2d_init(kg(), l.kernel, l.kernel, l.c_in, l.c_out,
+                                     dtype=dtype)
+            for i, l in enumerate(spec.layers)}
+
+
+_ACTS: dict[str, Callable] = {
+    "relu": jax.nn.relu,
+    "sigmoid": jax.nn.sigmoid,
+    "linear": lambda x: x,
+}
+
+
+def miniconv_apply(params, spec: MiniConvSpec, x, *, use_kernel: bool = False):
+    """x: (B, H, W, C_in) float in [0,1] -> (B, H', W', K).
+
+    ``use_kernel=True`` routes each pass through the Pallas shader-pass
+    kernel (interpret mode on CPU); default uses XLA convs (training path).
+    """
+    if use_kernel:
+        from repro.kernels.ops import miniconv_layer  # lazy: avoids cycles
+    for i, l in enumerate(spec.layers):
+        p = params[f"layer{i}"]
+        if use_kernel:
+            x = miniconv_layer(x, p["kernel"], p["bias"], stride=l.stride)
+        else:
+            x = conv2d(p, x, stride=l.stride, padding="SAME")
+        x = _ACTS[l.activation](x)
+    return x
+
+
+def miniconv_feature_shape(spec: MiniConvSpec, h: int, w: int) -> tuple:
+    for l in spec.layers:
+        h = math.ceil(h / l.stride)
+        w = math.ceil(w / l.stride)
+    return (h, w, spec.k_out)

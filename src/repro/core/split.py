@@ -1,0 +1,73 @@
+"""Split-policy / split-model abstraction (the paper's core contribution).
+
+A :class:`SplitModel` partitions any (params, x) -> y function into an
+*edge* half and a *server* half with a wire codec at the boundary:
+
+    features      = edge_apply(edge_params, obs)          # on-device
+    payload       = codec.encode(features)                # uint8 buffer
+    --- network / inter-pod link ---
+    features'     = codec.decode(payload)
+    action/logits = server_apply(server_params, features') # remote
+
+For RL policies the edge half is a MiniConv encoder; for the assigned
+transformer architectures the edge half is the first ``n_edge_layers``
+blocks (see repro.models.transformer.split_forward) and the link is the
+inter-pod DCN.
+
+``split_train_apply`` runs the full composition *with* the quantisation in
+the forward pass (straight-through estimator) so training matches the
+deployed numerics — the paper trains end-to-end in float and deploys the
+quantised wire; both modes are supported via ``quantize_in_train``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wire import WireCodec, get_codec
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitModel:
+    edge_apply: Callable[[Params, jnp.ndarray], jnp.ndarray]
+    server_apply: Callable[[Params, jnp.ndarray], Any]
+    codec: WireCodec
+    quantize_in_train: bool = False
+
+    # ---- deployment path ---------------------------------------------------
+    def edge_step(self, edge_params, obs):
+        """Runs on-device; returns the wire payload."""
+        feats = self.edge_apply(edge_params, obs)
+        return self.codec.encode(feats)
+
+    def server_step(self, server_params, payload):
+        feats = self.codec.decode(payload)
+        return self.server_apply(server_params, feats)
+
+    def wire_bytes(self, feature_shape: tuple) -> int:
+        return self.codec.wire_bytes(feature_shape)
+
+    # ---- training path (single process, differentiable) --------------------
+    def apply(self, params, obs):
+        feats = self.edge_apply(params["edge"], obs)
+        if self.quantize_in_train:
+            feats = straight_through(self.codec, feats)
+        return self.server_apply(params["server"], feats)
+
+
+def straight_through(codec: WireCodec, x: jnp.ndarray) -> jnp.ndarray:
+    """Quantise in the forward pass, identity gradient in the backward."""
+    q = codec.decode(codec.encode(x), dtype=x.dtype)
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def make_split_policy(edge_apply, server_apply, *, codec: str = "uint8",
+                      quantize_in_train: bool = False) -> SplitModel:
+    return SplitModel(edge_apply=edge_apply, server_apply=server_apply,
+                      codec=get_codec(codec),
+                      quantize_in_train=quantize_in_train)

@@ -1,0 +1,130 @@
+"""Wire codecs for the split boundary.
+
+The paper transmits the on-device encoder's K-channel feature map as an
+uncompressed uint8 buffer.  We generalise this into a codec interface so the
+same machinery serves (a) the RL split policy (uint8 feature maps) and
+(b) the pod-boundary transformer split (uint8/int8 affine-quantised hidden
+states crossing the inter-pod link).
+
+All codecs are jit-compatible pure functions; ``wire_bytes`` gives the exact
+on-the-wire size used by the latency model and by the collective-bytes
+accounting in the roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Payload = dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Base: float32 passthrough."""
+
+    name: str = "float32"
+    itemsize: float = 4.0
+    overhead_bytes_per_tensor: int = 0
+
+    def encode(self, x: jnp.ndarray) -> Payload:
+        return {"data": x.astype(jnp.float32)}
+
+    def decode(self, payload: Payload, dtype=jnp.float32) -> jnp.ndarray:
+        return payload["data"].astype(dtype)
+
+    def wire_bytes(self, shape: tuple) -> int:
+        return math.prod(shape) * int(self.itemsize) + \
+            self.overhead_bytes_per_tensor
+
+    def wire_bits(self, shape: tuple) -> int:
+        return 8 * self.wire_bytes(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class BF16Codec(WireCodec):
+    name: str = "bf16"
+    itemsize: float = 2.0
+
+    def encode(self, x):
+        return {"data": x.astype(jnp.bfloat16)}
+
+    def decode(self, payload, dtype=jnp.float32):
+        return payload["data"].astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Uint8AffineCodec(WireCodec):
+    """Per-tensor affine quantisation to uint8 (the paper's wire format for
+    features in [0,1]; scale/zero travel as an 8-byte header)."""
+
+    name: str = "uint8"
+    itemsize: float = 1.0
+    overhead_bytes_per_tensor: int = 8
+
+    def encode(self, x):
+        xf = x.astype(jnp.float32)
+        lo = jnp.min(xf)
+        hi = jnp.max(xf)
+        scale = jnp.maximum(hi - lo, 1e-8) / 255.0
+        q = jnp.clip(jnp.round((xf - lo) / scale), 0, 255).astype(jnp.uint8)
+        return {"data": q, "scale": scale, "zero": lo}
+
+    def decode(self, payload, dtype=jnp.float32):
+        return (payload["data"].astype(jnp.float32) * payload["scale"]
+                + payload["zero"]).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8ChannelCodec(WireCodec):
+    """Per-channel (last axis) symmetric int8 — used for transformer hidden
+    states at the pod boundary, where per-channel scales matter."""
+
+    name: str = "int8_channel"
+    itemsize: float = 1.0
+
+    def encode(self, x):
+        xf = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xf), axis=tuple(range(xf.ndim - 1)),
+                       keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        return {"data": q, "scale": scale}
+
+    def decode(self, payload, dtype=jnp.float32):
+        return (payload["data"].astype(jnp.float32)
+                * payload["scale"]).astype(dtype)
+
+    def wire_bytes(self, shape):
+        return math.prod(shape) + 4 * shape[-1]
+
+
+CODECS: dict[str, WireCodec] = {
+    "float32": WireCodec(),
+    "bf16": BF16Codec(),
+    "uint8": Uint8AffineCodec(),
+    "int8_channel": Int8ChannelCodec(),
+}
+
+
+def get_codec(name: str) -> WireCodec:
+    return CODECS[name]
+
+
+def roundtrip(codec: WireCodec, x: jnp.ndarray) -> jnp.ndarray:
+    """Quantise-dequantise (what the server-side half actually sees)."""
+    return codec.decode(codec.encode(x), dtype=x.dtype)
+
+
+def frame_bytes_rgba(x_size: int) -> int:
+    """Bytes of a full RGBA frame (the server-only pipeline's payload)."""
+    return 4 * x_size * x_size
+
+
+def feature_bytes(x_size: int, n_stride2: int, k: int) -> int:
+    """Bytes of the K-channel feature map after n stride-2 layers (paper)."""
+    s = x_size // (2 ** n_stride2)
+    return k * s * s

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (SyntheticLM, lm_batches, frontend_batches,
+                                  zipf_tokens)
+
+__all__ = ["SyntheticLM", "lm_batches", "frontend_batches", "zipf_tokens"]

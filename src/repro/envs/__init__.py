@@ -1,0 +1,17 @@
+"""Pure-JAX visual control suite (replaces MuJoCo/Gymnasium offline)."""
+
+from repro.envs.base import Env
+from repro.envs.hopper import ENV as HOPPER
+from repro.envs.pendulum import ENV as PENDULUM
+from repro.envs.walker import ENV as WALKER
+
+REGISTRY: dict[str, Env] = {
+    "pendulum": PENDULUM,
+    "hopper": HOPPER,
+    "walker": WALKER,
+}
+
+from repro.envs.wrappers import PixelEnv, make_pixel_env  # noqa: E402
+
+__all__ = ["Env", "REGISTRY", "PixelEnv", "make_pixel_env",
+           "PENDULUM", "HOPPER", "WALKER"]

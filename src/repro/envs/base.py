@@ -1,0 +1,27 @@
+"""Functional environment interface (pure-JAX, vmap/scan friendly)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+State = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    """Bundle of pure functions defining one environment.
+
+    reset(key) -> state
+    step(state, action) -> (state, reward, done)   [action: (action_dim,)]
+    render(state) -> (res, res, 3) float32 in [0, 1]
+    """
+
+    name: str
+    reset: Callable
+    step: Callable
+    render: Callable
+    action_dim: int
+    max_steps: int
+    resolution: int = 100

@@ -1,0 +1,116 @@
+"""Hopper2D — simplified planar one-legged hopper (SLIP-style).
+
+Not MuJoCo-exact (DESIGN.md §4): a spring-loaded-inverted-pendulum body with
+actuated leg thrust, hip torque, and leg-length rate.  Preserves the
+experimental role of Hopper-v4: continuous actions (3), pixel observations
+via a tracking camera, reward = forward velocity + alive bonus - control
+cost, termination on falling.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env
+from repro.envs.rendering import (Camera, blank, draw_capsule,
+                                  draw_checker_ground, draw_circle)
+
+_DT = 0.02
+_G = 9.8
+_M = 1.0          # body mass
+_L0 = 0.55        # rest leg length
+_KSPRING = 140.0  # leg spring
+_DAMP = 4.0
+MAX_STEPS = 400
+
+
+class HopperState(NamedTuple):
+    x: jnp.ndarray        # body horizontal position
+    z: jnp.ndarray        # body height
+    vx: jnp.ndarray
+    vz: jnp.ndarray
+    leg_angle: jnp.ndarray   # from vertical, + = forward
+    leg_len: jnp.ndarray
+    t: jnp.ndarray
+
+
+def reset(key) -> HopperState:
+    k1, k2 = jax.random.split(key)
+    return HopperState(
+        x=jnp.zeros(()),
+        z=_L0 + 0.25 + jax.random.uniform(k1, (), minval=0.0, maxval=0.05),
+        vx=jnp.zeros(()),
+        vz=jnp.zeros(()),
+        leg_angle=jax.random.uniform(k2, (), minval=-0.05, maxval=0.05),
+        leg_len=jnp.asarray(_L0),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def _foot(state: HopperState):
+    fx = state.x + state.leg_len * jnp.sin(state.leg_angle)
+    fz = state.z - state.leg_len * jnp.cos(state.leg_angle)
+    return fx, fz
+
+
+def step(state: HopperState, action):
+    thrust = jnp.clip(action[0], -1, 1) * 90.0      # spring pre-load
+    hip = jnp.clip(action[1], -1, 1) * 3.0          # leg swing rate
+    rate = jnp.clip(action[2], -1, 1) * 0.6         # leg length rate
+
+    fx, fz = _foot(state)
+    in_stance = fz <= 0.0
+
+    # stance: spring force along the leg (plus thrust), acting on the body
+    compression = jnp.maximum(_L0 - state.leg_len, 0.0)
+    spring_f = jnp.where(in_stance,
+                         _KSPRING * compression + jnp.maximum(thrust, 0.0)
+                         - _DAMP * (-state.vz), 0.0)
+    ax = spring_f * jnp.sin(state.leg_angle) / _M * (-1.0)
+    az = spring_f * jnp.cos(state.leg_angle) / _M - _G
+
+    # stance foot friction damps horizontal motion a little
+    ax = ax - jnp.where(in_stance, 0.8 * state.vx, 0.0)
+
+    vx = state.vx + ax * _DT
+    vz = state.vz + az * _DT
+    x = state.x + vx * _DT
+    z = state.z + vz * _DT
+
+    # leg control: swing in flight, compress/extend always
+    leg_angle = state.leg_angle + hip * _DT * jnp.where(in_stance, 0.25, 1.0)
+    leg_angle = jnp.clip(leg_angle, -0.7, 0.7)
+    leg_len = jnp.clip(state.leg_len + rate * _DT
+                       - jnp.where(in_stance, 0.5 * compression * _DT, 0.0),
+                       0.6 * _L0, 1.15 * _L0)
+
+    # stance constraint: keep body above ground through the leg
+    z = jnp.maximum(z, 0.35 * _L0)
+
+    new = HopperState(x, z, vx, vz, leg_angle, leg_len, state.t + 1)
+
+    ctrl_cost = 1e-3 * jnp.sum(jnp.square(jnp.asarray(
+        [action[0], action[1], action[2]])))
+    healthy = (z > 0.45) & (jnp.abs(leg_angle) < 0.69)
+    reward = vx + 1.0 * healthy.astype(jnp.float32) - ctrl_cost
+    done = (~healthy) | (new.t >= MAX_STEPS)
+    return new, reward, done
+
+
+def render(state: HopperState):
+    cam = Camera(center_x=state.x, center_y=0.6, half_extent=1.1)
+    img = blank()
+    img = draw_checker_ground(img, cam, 0.0)
+    fx, fz = _foot(state)
+    img = draw_capsule(img, cam, state.x, state.z, fx, jnp.maximum(fz, 0.0),
+                       0.05, (0.85, 0.45, 0.2))
+    img = draw_circle(img, cam, state.x, state.z, 0.16, (0.2, 0.3, 0.8))
+    img = draw_circle(img, cam, fx, jnp.maximum(fz, 0.02), 0.06,
+                      (0.15, 0.15, 0.15))
+    return img
+
+
+ENV = Env(name="hopper", reset=reset, step=step, render=render,
+          action_dim=3, max_steps=MAX_STEPS)

@@ -1,0 +1,71 @@
+"""Pendulum-v1 (Classic Control) — dynamics faithful to Gymnasium.
+
+theta'' = 3g/(2l) sin(theta) + 3/(m l^2) u,  dt = 0.05, |u| <= 2,
+reward = -(angle_norm^2 + 0.1 theta_dot^2 + 0.001 u^2), 200-step episodes.
+Rendered with the default static camera: rod from the pivot, bob at the tip.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env
+from repro.envs.rendering import (Camera, blank, draw_capsule, draw_circle,
+                                  to_uint8)
+
+_G, _M, _L, _DT = 10.0, 1.0, 1.0, 0.05
+MAX_TORQUE = 2.0
+MAX_SPEED = 8.0
+
+
+class PendulumState(NamedTuple):
+    theta: jnp.ndarray
+    theta_dot: jnp.ndarray
+    t: jnp.ndarray
+
+
+def _angle_normalize(x):
+    return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+
+
+def reset(key) -> PendulumState:
+    k1, k2 = jax.random.split(key)
+    theta = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
+    theta_dot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+    return PendulumState(theta, theta_dot, jnp.zeros((), jnp.int32))
+
+
+def step(state: PendulumState, action):
+    # policy actions live in [-1, 1]; scale to the torque limit
+    u = jnp.clip(action[0] * MAX_TORQUE, -MAX_TORQUE, MAX_TORQUE)
+    th, thdot = state.theta, state.theta_dot
+    cost = (_angle_normalize(th) ** 2 + 0.1 * thdot ** 2 + 0.001 * u ** 2)
+    newthdot = thdot + (3 * _G / (2 * _L) * jnp.sin(th)
+                        + 3.0 / (_M * _L ** 2) * u) * _DT
+    newthdot = jnp.clip(newthdot, -MAX_SPEED, MAX_SPEED)
+    newth = th + newthdot * _DT
+    new = PendulumState(newth, newthdot, state.t + 1)
+    done = new.t >= 200
+    return new, -cost, done
+
+
+_CAM = Camera(center_x=0.0, center_y=0.0, half_extent=1.5)
+
+
+def render(state: PendulumState):
+    th = state.theta
+    # Gym convention: theta=0 is upright
+    tip_x = _L * jnp.sin(th)
+    tip_y = _L * jnp.cos(th)
+    img = blank()
+    img = draw_capsule(img, _CAM, 0.0, 0.0, tip_x, tip_y, 0.09,
+                       (0.8, 0.3, 0.3))
+    img = draw_circle(img, _CAM, 0.0, 0.0, 0.06, (0.1, 0.1, 0.1))
+    img = draw_circle(img, _CAM, tip_x, tip_y, 0.12, (0.2, 0.2, 0.7))
+    return img
+
+
+ENV = Env(name="pendulum", reset=reset, step=step, render=render,
+          action_dim=1, max_steps=200)

@@ -1,0 +1,71 @@
+"""Software rasteriser in jnp: distance-field drawing onto a pixel grid.
+
+Replaces MuJoCo's OpenGL renderer for pixel observations (DESIGN.md §4).
+All draws are pure functions (B-free; vmap over batch outside).  World
+coordinates are mapped through a camera (centre + half-extent) so tracking
+cameras (Walker/Hopper) and static cameras (Pendulum) share one code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Camera:
+    center_x: float | jnp.ndarray
+    center_y: float | jnp.ndarray
+    half_extent: float
+    resolution: int = 100
+
+    def grid(self):
+        r = self.resolution
+        ys = jnp.linspace(1.0, -1.0, r) * self.half_extent + self.center_y
+        xs = jnp.linspace(-1.0, 1.0, r) * self.half_extent + self.center_x
+        return jnp.meshgrid(xs, ys)  # (X, Y) each (r, r); row 0 = top
+
+
+def blank(resolution: int = 100, color=(1.0, 1.0, 1.0)) -> jnp.ndarray:
+    return jnp.ones((resolution, resolution, 3)) * jnp.asarray(color)
+
+
+def _paint(img, mask, color):
+    return jnp.where(mask[..., None], jnp.asarray(color), img)
+
+
+def draw_circle(img, cam: Camera, cx, cy, radius, color):
+    X, Y = cam.grid()
+    mask = (X - cx) ** 2 + (Y - cy) ** 2 <= radius ** 2
+    return _paint(img, mask, color)
+
+
+def draw_capsule(img, cam: Camera, x1, y1, x2, y2, radius, color):
+    """Filled segment with round caps (how MuJoCo draws geoms)."""
+    X, Y = cam.grid()
+    dx, dy = x2 - x1, y2 - y1
+    len2 = dx * dx + dy * dy + 1e-12
+    t = jnp.clip(((X - x1) * dx + (Y - y1) * dy) / len2, 0.0, 1.0)
+    px, py = x1 + t * dx, y1 + t * dy
+    mask = (X - px) ** 2 + (Y - py) ** 2 <= radius ** 2
+    return _paint(img, mask, color)
+
+
+def draw_ground(img, cam: Camera, ground_y, color=(0.55, 0.45, 0.35)):
+    _, Y = cam.grid()
+    return _paint(img, Y <= ground_y, color)
+
+
+def draw_checker_ground(img, cam: Camera, ground_y, period: float = 0.5):
+    """Checkered ground so forward motion is visible to a tracking camera."""
+    X, Y = cam.grid()
+    stripe = jnp.floor(X / period).astype(jnp.int32) % 2
+    color_a = jnp.asarray((0.60, 0.50, 0.40))
+    color_b = jnp.asarray((0.45, 0.37, 0.30))
+    ground = jnp.where(stripe[..., None] == 0, color_a, color_b)
+    return jnp.where((Y <= ground_y)[..., None], ground, img)
+
+
+def to_uint8(img: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(jnp.round(img * 255.0), 0, 255).astype(jnp.uint8)

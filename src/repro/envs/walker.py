@@ -1,0 +1,126 @@
+"""Walker2D — simplified planar biped.
+
+Not MuJoCo-exact (DESIGN.md §4): a torso with two telescoping torque-swung
+legs and spring-damper ground contact.  Preserves the experimental role of
+Walker2d-v4: 6 continuous actions, pixel observations via a tracking
+camera, reward = forward velocity + alive bonus - control cost,
+termination when the torso falls or pitches over.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env
+from repro.envs.rendering import (Camera, blank, draw_capsule,
+                                  draw_checker_ground, draw_circle)
+
+_DT = 0.02
+_G = 9.8
+_M = 1.2
+_I = 0.12          # torso moment of inertia
+_L0 = 0.5
+_KC = 220.0        # contact spring
+_DC = 9.0          # contact damping
+MAX_STEPS = 400
+
+
+class WalkerState(NamedTuple):
+    x: jnp.ndarray
+    z: jnp.ndarray
+    pitch: jnp.ndarray
+    vx: jnp.ndarray
+    vz: jnp.ndarray
+    vpitch: jnp.ndarray
+    leg_angle: jnp.ndarray   # (2,) from vertical
+    leg_len: jnp.ndarray     # (2,)
+    t: jnp.ndarray
+
+
+def reset(key) -> WalkerState:
+    k1, k2 = jax.random.split(key)
+    return WalkerState(
+        x=jnp.zeros(()), z=jnp.asarray(_L0 + 0.12),
+        pitch=jax.random.uniform(k1, (), minval=-0.03, maxval=0.03),
+        vx=jnp.zeros(()), vz=jnp.zeros(()), vpitch=jnp.zeros(()),
+        leg_angle=jnp.asarray([0.12, -0.12])
+        + jax.random.uniform(k2, (2,), minval=-0.03, maxval=0.03),
+        leg_len=jnp.full((2,), _L0),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def _feet(state: WalkerState):
+    fx = state.x + state.leg_len * jnp.sin(state.leg_angle)
+    fz = state.z - state.leg_len * jnp.cos(state.leg_angle)
+    return fx, fz
+
+
+def step(state: WalkerState, action):
+    action = jnp.clip(action, -1, 1)
+    hip = action[:2] * 4.0       # swing rate per leg
+    knee = action[2:4] * 0.8     # length rate per leg
+    push = action[4:6] * 60.0    # extension force per leg (stance push-off)
+
+    fx, fz = _feet(state)
+    pen = jnp.maximum(-fz, 0.0)                       # ground penetration
+    in_stance = pen > 0.0
+
+    # contact force along each leg (spring-damper + actuated push)
+    f_leg = jnp.where(in_stance,
+                      _KC * pen - _DC * state.vz + jnp.maximum(push, 0.0),
+                      0.0)
+    f_leg = jnp.maximum(f_leg, 0.0)
+
+    ax = jnp.sum(-f_leg * jnp.sin(state.leg_angle)) / _M
+    az = jnp.sum(f_leg * jnp.cos(state.leg_angle)) / _M - _G
+    # stance friction + hip reaction torque pitches the torso
+    ax = ax - jnp.sum(jnp.where(in_stance, 0.6, 0.0)) * state.vx / _M
+    torque = jnp.sum(jnp.where(in_stance, -0.15 * hip, 0.02 * hip))
+    apitch = (torque - 2.2 * state.pitch - 0.5 * state.vpitch) / _I
+
+    vx = state.vx + ax * _DT
+    vz = state.vz + az * _DT
+    vpitch = state.vpitch + apitch * _DT
+    x = state.x + vx * _DT
+    z = jnp.maximum(state.z + vz * _DT, 0.3 * _L0)
+    pitch = state.pitch + vpitch * _DT
+
+    leg_angle = jnp.clip(state.leg_angle
+                         + hip * _DT * jnp.where(in_stance, 0.3, 1.0),
+                         -0.8, 0.8)
+    leg_len = jnp.clip(state.leg_len + knee * _DT, 0.55 * _L0, 1.2 * _L0)
+
+    new = WalkerState(x, z, pitch, vx, vz, vpitch, leg_angle, leg_len,
+                      state.t + 1)
+
+    ctrl_cost = 1e-3 * jnp.sum(jnp.square(action))
+    healthy = (z > 0.4) & (jnp.abs(pitch) < 1.0)
+    reward = vx + 1.0 * healthy.astype(jnp.float32) - ctrl_cost
+    done = (~healthy) | (new.t >= MAX_STEPS)
+    return new, reward, done
+
+
+def render(state: WalkerState):
+    cam = Camera(center_x=state.x, center_y=0.6, half_extent=1.1)
+    img = blank()
+    img = draw_checker_ground(img, cam, 0.0)
+    fx, fz = _feet(state)
+    colors = [(0.85, 0.45, 0.2), (0.7, 0.25, 0.45)]
+    for i in range(2):
+        img = draw_capsule(img, cam, state.x, state.z, fx[i],
+                           jnp.maximum(fz[i], 0.0), 0.05, colors[i])
+        img = draw_circle(img, cam, fx[i], jnp.maximum(fz[i], 0.02), 0.055,
+                          (0.15, 0.15, 0.15))
+    # torso drawn as a tilted capsule
+    tx = state.x + 0.35 * jnp.sin(state.pitch)
+    tz = state.z + 0.35 * jnp.cos(state.pitch)
+    img = draw_capsule(img, cam, state.x, state.z, tx, tz, 0.12,
+                       (0.2, 0.3, 0.8))
+    return img
+
+
+ENV = Env(name="walker", reset=reset, step=step, render=render,
+          action_dim=6, max_steps=MAX_STEPS)

@@ -1,0 +1,98 @@
+"""Observation pipeline matching the paper's wrapper stack (§4.1):
+
+render 100x100 RGB -> crop to 84x84 (random crop in training, centre crop
+in eval) -> float in [0,1] -> FrameStack(3) -> (84, 84, 9) HWC tensor.
+For deployment/bandwidth analyses an opaque alpha channel is appended at
+the (simulated) OpenGL upload boundary; training uses RGB only.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env
+
+RENDER_RES = 100
+CROP = 84
+STACK = 3
+
+
+class PixelEnvState(NamedTuple):
+    inner: object
+    frames: jnp.ndarray          # (STACK, CROP, CROP, 3) float32
+    key: jnp.ndarray
+    episode_return: jnp.ndarray
+    step_count: jnp.ndarray
+
+
+def _crop(frame, key, *, train: bool):
+    if train:
+        ox = jax.random.randint(key, (), 0, RENDER_RES - CROP + 1)
+        oy = jax.random.randint(jax.random.fold_in(key, 1), (),
+                                0, RENDER_RES - CROP + 1)
+    else:
+        ox = oy = (RENDER_RES - CROP) // 2
+    return jax.lax.dynamic_slice(frame, (oy, ox, 0), (CROP, CROP, 3))
+
+
+def _obs(frames):
+    """(STACK, H, W, 3) -> (H, W, 3*STACK) channel-stacked observation."""
+    return jnp.concatenate(list(frames), axis=-1)
+
+
+class PixelEnv:
+    """Wraps a state-based Env into the paper's pixel pipeline."""
+
+    def __init__(self, env: Env, *, train: bool = True):
+        self.env = env
+        self.train = train
+        self.obs_shape = (CROP, CROP, 3 * STACK)
+        self.action_dim = env.action_dim
+
+    def reset(self, key):
+        k_env, k_crop, k_next = jax.random.split(key, 3)
+        inner = self.env.reset(k_env)
+        frame = _crop(self.env.render(inner), k_crop, train=self.train)
+        frames = jnp.broadcast_to(frame, (STACK,) + frame.shape)
+        state = PixelEnvState(inner, frames, k_next,
+                              jnp.zeros(()), jnp.zeros((), jnp.int32))
+        return state, _obs(frames)
+
+    def step(self, state: PixelEnvState, action):
+        k_crop, k_reset, k_next = jax.random.split(state.key, 3)
+        inner, reward, done = self.env.step(state.inner, action)
+        frame = _crop(self.env.render(inner), k_crop, train=self.train)
+        frames = jnp.concatenate([state.frames[1:], frame[None]], axis=0)
+
+        # auto-reset on done (standard vectorised-env semantics)
+        reset_inner = self.env.reset(k_reset)
+        reset_frame = _crop(self.env.render(reset_inner), k_crop,
+                            train=self.train)
+        reset_frames = jnp.broadcast_to(reset_frame,
+                                        (STACK,) + reset_frame.shape)
+        inner = jax.tree.map(
+            lambda a, b: jnp.where(done, a, b), reset_inner, inner)
+        frames = jnp.where(done, reset_frames, frames)
+
+        ep_ret = jnp.where(done, 0.0, state.episode_return + reward)
+        steps = jnp.where(done, 0, state.step_count + 1)
+        new = PixelEnvState(inner, frames, k_next, ep_ret, steps)
+        return new, _obs(frames), reward, done
+
+    # -- deployment boundary -------------------------------------------------
+    @staticmethod
+    def to_rgba_uint8(obs):
+        """Simulated OpenGL upload: append opaque alpha, quantise to uint8.
+        obs: (H, W, 3*STACK) float -> (H, W, 4*STACK) uint8."""
+        h, w, c = obs.shape
+        rgb = obs.reshape(h, w, STACK, 3)
+        alpha = jnp.ones((h, w, STACK, 1))
+        rgba = jnp.concatenate([rgb, alpha], axis=-1).reshape(h, w, 4 * STACK)
+        return jnp.clip(jnp.round(rgba * 255), 0, 255).astype(jnp.uint8)
+
+
+def make_pixel_env(name: str, *, train: bool = True) -> PixelEnv:
+    from repro.envs import REGISTRY
+    return PixelEnv(REGISTRY[name], train=train)

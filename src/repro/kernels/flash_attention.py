@@ -1,0 +1,109 @@
+"""Blocked (flash) attention Pallas kernel for prefill.
+
+Grid = (batch, head, q_block, kv_block) with the kv dimension sequential:
+each step streams one (block_k, d) K/V tile through VMEM, maintaining the
+online-softmax running max / normaliser / accumulator in fp32 scratch.
+Causal and sliding-window masks are applied per block; fully-masked blocks
+contribute nothing (their running-max update is a no-op).
+
+Block sizes default to (128, 128): MXU-aligned on both matmul dims.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int,
+                  causal: bool, window: Optional[int]):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                # (bk, d)
+
+    s = q @ k.T                                        # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                                # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                             # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sliding_window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sliding_window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q, k, v: (B, H, S, D) -> (B, H, S, D).  GQA handled by the caller
+    (repeat K/V heads before the call)."""
+    B, H, S, D = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    grid = (B, H, S // block_q, S // block_k)
+    scale = D ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=sliding_window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

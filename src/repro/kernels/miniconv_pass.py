@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for one MiniConv "shader pass".
+
+A fragment-shader pass computes each output pixel by sampling a k x k
+neighbourhood of <= 8 bound textures (4 channels each) and writes one RGBA
+(4-channel) output texture.  The TPU adaptation keeps the pass structure but
+re-tiles it for VMEM/MXU:
+
+* grid = (batch, out_row, kernel_row): each grid step loads ONE input row
+  (the analogue of one row of texture samples), multiplies it against one
+  kernel row, and accumulates into the output row's VMEM scratch.  The
+  kernel-row grid dimension is sequential ("arbitrary"), so the output block
+  is revisited and accumulated in fp32, exactly like the shader's running
+  sum over its sampling budget.
+* the inner product per kernel column is a (W_out, C_in) @ (C_in, 4) matmul
+  — C_in <= 32 by the shader budget, so the whole pass working set
+  (one input row + one kernel + one output row) stays far below VMEM.
+
+Stride-2 passes subsample the input row grid, mirroring the shader's
+half-resolution render target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pass_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, stride: int,
+                 kw: int, w_out: int):
+    """One (batch, out_row, kernel_row) grid step.
+
+    x_ref: (1, 1, W_in, C_in) — the input row sampled by this step
+    w_ref: (kh, kw, C_in, 4) — full pass weights (constant across grid)
+    b_ref: (1, 4)            — bias
+    o_ref: (1, 1, W_out, 4)  — output row (written on the last kernel row)
+    acc_ref: (W_out, 4) fp32 scratch
+    """
+    i = pl.program_id(2)          # kernel row index
+    kh = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.broadcast_to(b_ref[0].astype(jnp.float32),
+                                        acc_ref.shape)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (W_in, C_in)
+    w = w_ref[i].astype(jnp.float32)         # (kw, C_in, 4)
+
+    acc = acc_ref[...]
+    for j in range(kw):                       # the shader's column samples
+        cols = jax.lax.slice(x, (j, 0),
+                             (j + (w_out - 1) * stride + 1, x.shape[1]),
+                             (stride, 1))     # (W_out, C_in)
+        acc = acc + cols @ w[j]               # MXU: (W_out,C_in)@(C_in,4)
+    acc_ref[...] = acc
+
+    @pl.when(i == kh - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "interpret"))
+def miniconv_pass(x, w, b, *, stride: int = 1, interpret: bool = True):
+    """One shader pass on a pre-padded input (VALID convolution).
+
+    x: (B, H_in, W_in, C_in); w: (kh, kw, C_in, 4); b: (4,).
+    Returns (B, H_out, W_out, 4) with
+    H_out = (H_in - kh)//stride + 1, W_out = (W_in - kw)//stride + 1.
+    """
+    B, h_in, w_in, c_in = x.shape
+    kh, kw, c_in_w, c_out = w.shape
+    assert c_in == c_in_w and c_out == 4, (x.shape, w.shape)
+    h_out = (h_in - kh) // stride + 1
+    w_out = (w_in - kw) // stride + 1
+
+    grid = (B, h_out, kh)
+    return pl.pallas_call(
+        functools.partial(_pass_kernel, stride=stride, kw=kw, w_out=w_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, w_in, c_in),
+                         lambda b_, q, i: (b_, q * stride + i, 0, 0)),
+            pl.BlockSpec((kh, kw, c_in, 4), lambda b_, q, i: (0, 0, 0, 0)),
+            pl.BlockSpec((1, 4), lambda b_, q, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w_out, 4),
+                               lambda b_, q, i: (b_, q, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, h_out, w_out, 4), x.dtype),
+        scratch_shapes=[pltpu.VMEM((w_out, 4), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, b.reshape(1, 4))

@@ -1,0 +1,67 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the kernel body is
+executed in Python for correctness); on TPU set ``REPRO_PALLAS_COMPILE=1``
+or pass interpret=False explicitly.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.miniconv_pass import miniconv_pass
+
+
+def _default_interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def same_pad(x, kernel: int, stride: int):
+    """SAME padding for a square kernel so the Pallas pass (VALID) matches
+    XLA's SAME conv."""
+    _, h, w, _ = x.shape
+    out_h = -(-h // stride)
+    out_w = -(-w // stride)
+    pad_h = max((out_h - 1) * stride + kernel - h, 0)
+    pad_w = max((out_w - 1) * stride + kernel - w, 0)
+    return jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                       (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+
+
+def miniconv_layer(x, kernel, bias, *, stride: int = 1,
+                   interpret: Optional[bool] = None):
+    """One MiniConv layer = ceil(c_out/4) shader passes (SAME padding).
+
+    x: (B,H,W,C_in); kernel: (kh,kw,C_in,C_out); bias: (C_out,).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    kh = kernel.shape[0]
+    c_out = kernel.shape[-1]
+    assert c_out % 4 == 0, "shader passes write 4 channels each"
+    xp = same_pad(x, kh, stride)
+    outs = [miniconv_pass(xp, kernel[..., g:g + 4], bias[g:g + 4],
+                          stride=stride, interpret=interpret)
+            for g in range(0, c_out, 4)]
+    return jnp.concatenate(outs, axis=-1) if len(outs) > 1 else outs[0]
+
+
+def causal_attention(q, k, v, *, sliding_window: Optional[int] = None,
+                     block_q: int = 128, block_k: int = 128,
+                     interpret: Optional[bool] = None):
+    """(B, H, S, D) flash attention wrapper (causal)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_attention(q, k, v, causal=True,
+                           sliding_window=sliding_window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+
+
+__all__ = ["miniconv_layer", "causal_attention", "miniconv_pass",
+           "flash_attention", "same_pad"]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def miniconv_pass_ref(x, w, b, *, stride: int = 1):
+    """VALID conv oracle matching kernels.miniconv_pass."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  sliding_window: Optional[int] = None, scale=None):
+    """Oracle for kernels.flash_attention.  q,k,v: (B, H, S, D)."""
+    B, H, S, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if sliding_window is not None:
+        mask &= k_pos > q_pos - sliding_window
+    logits = jnp.where(mask[None, None], logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)

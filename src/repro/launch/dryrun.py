@@ -1,0 +1,122 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+on the production meshes, print memory/cost analysis, and emit the
+roofline table rows (EXPERIMENTS.md §Dry-run / §Roofline read this).
+
+The XLA_FLAGS line above MUST precede any jax import: jax locks the device
+count at first init.  Do not set this flag globally — smoke tests and
+benchmarks should see one device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HEADER, analyse, fmt_row
+from repro.launch.steps import make_step
+
+
+def run_one(arch: str, shape_id: str, mesh_name: str, *,
+            overrides=None, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.devices.size
+    bundle = make_step(arch, shape_id, mesh, overrides=overrides)
+    t0 = time.time()
+    lowered = bundle.lower(mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(f"[{bundle.name} mesh={mesh_name}] lower {t1-t0:.1f}s "
+              f"compile {t2-t1:.1f}s")
+        print(f"  memory_analysis: {mem}")
+    r = analyse(compiled, arch=arch, shape_cfg=SHAPES[shape_id],
+                mesh_name=mesh_name, chips=chips, cfg=get_config(arch))
+    if verbose:
+        ca = compiled.cost_analysis()
+        print(f"  cost_analysis: flops/chip={r.flops_per_chip:.3e} "
+              f"bytes/chip={r.bytes_per_chip:.3e}")
+        print(f"  collectives/chip: { {k: v for k, v in
+                                       r.coll_breakdown.items() if v} }")
+        print("  " + fmt_row(r))
+    d = r.to_dict()
+    d["lower_s"] = t1 - t0
+    d["compile_s"] = t2 - t1
+    if overrides:
+        d["overrides"] = {k: str(v) for k, v in overrides.items()}
+    return d
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) combination")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    ap.add_argument("--override", action="append", default=[],
+                    help="perf override key=value (repeatable)")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        if v in ("true", "false"):
+            overrides[k] = v == "true"
+        else:
+            try:
+                overrides[k] = json.loads(v)
+            except json.JSONDecodeError:
+                overrides[k] = v          # plain string (e.g. tp_only)
+
+    archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = sorted(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    print(HEADER)
+    failures = []
+    for arch in archs:
+        for shape_id in shapes:
+            for mesh_name in meshes:
+                try:
+                    d = run_one(arch, shape_id, mesh_name,
+                                overrides=overrides or None)
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps(d) + "\n")
+                except Exception as e:  # a failure here is a sharding bug
+                    traceback.print_exc()
+                    failures.append((arch, shape_id, mesh_name, repr(e)))
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps({
+                                "arch": arch, "shape": shape_id,
+                                "mesh": mesh_name, "error": repr(e)}) + "\n")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print("\nall dry-runs lowered + compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,232 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch, shape, mesh):
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` reports the *per-device* (SPMD-partitioned)
+program, so the terms above are already per-chip seconds; multiplying the
+FLOPs back by chip count gives the global figure used for the
+MODEL_FLOPS utilisation ratio.
+
+collective_bytes is not in cost_analysis: we parse the post-optimisation
+HLO (``compiled.as_text()``) and sum operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Optional
+
+# TPU v5e hardware constants (per the brief)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "u4": 1, "s4": 1,
+}
+
+# e.g. "bf16[8,128,1024]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+[a-z0-9]*|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes per collective-op kind in post-opt HLO text."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z0-9-]+)(?:-start|-done)?\(",
+                      stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        base = op.removesuffix("-start").removesuffix("-done")
+        if base not in COLLECTIVE_OPS or op.endswith("-done"):
+            continue
+        # operand shapes are the dtype[shape] tokens after the '(' of the
+        # op call; the result type(s) come before '='
+        call = stripped.split("(", 1)[1] if "(" in stripped else ""
+        shapes = _SHAPE_RE.findall(call.split("),")[0] if ")," in call
+                                   else call)
+        out[base] += sum(_shape_bytes(d, s) for d, s in shapes)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float            # TPU-fusion-optimistic HBM traffic
+    coll_bytes_per_chip: float
+    coll_breakdown: dict[str, int]
+    model_flops: float               # 6·N·D (train) / 2·N·D (inference)
+    bytes_upper_per_chip: float = 0  # CPU-fusion-level upper bound
+    bytes_floor_per_chip: float = 0  # analytic perfect-fusion floor
+    peak_memory_bytes: Optional[int] = None   # from memory_analysis
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def hlo_flops_global(self) -> float:
+        return self.flops_per_chip * self.chips
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        if self.hlo_flops_global <= 0:
+            return float("nan")
+        return self.model_flops / self.hlo_flops_global
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "bytes_upper_per_chip": self.bytes_upper_per_chip,
+            "bytes_floor_per_chip": self.bytes_floor_per_chip,
+            "memory_floor_s": self.bytes_floor_per_chip / HBM_BW,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "peak_memory_bytes": self.peak_memory_bytes,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D for training (fwd+bwd), 2·N·D for inference steps, with
+    N = active params (MoE counts routed top-k + shared only)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1     # decode: one token per request
+    return 2.0 * n * tokens
+
+
+def hbm_floor_bytes(cfg, shape, chips: int) -> float:
+    """Analytic per-chip HBM-traffic floor: weights + boundary activations
+    + KV caches, assuming perfect fusion (flash attention keeps score
+    tiles in VMEM).  The gap between this and the measured ``bytes_fused``
+    is the fusion-quality headroom the §Perf loop works on."""
+    P = cfg.param_count()
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    B, S = shape.global_batch, shape.seq_len
+    tp = 16  # model axis
+    if shape.kind == "train":
+        weights = P * 2.0 * 3 / tp          # fwd + bwd + remat reads (bf16)
+        opt = P * 4.0 * 4 / chips           # adam m,v read+write (f32, FSDP)
+        acts = L * B * S * D * 2.0 * 4 / chips
+        logits = 3 * B * S * V * 2.0 / chips
+        return weights + opt + acts + logits
+    if shape.kind == "prefill":
+        weights = P * 2.0 / tp
+        acts = L * B * S * D * 2.0 * 2 / chips
+        return weights + acts
+    # decode: every cached byte is read once per token
+    kv = 0.0
+    for b in cfg.blocks():
+        if b == "attn":
+            kv += B * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2.0
+        elif b == "swa":
+            w = min(cfg.sliding_window or S, S)
+            kv += B * w * cfg.n_kv_heads * cfg.head_dim * 2 * 2.0
+        elif b == "ssm":
+            s = cfg.ssm
+            kv += B * (cfg.d_model * s.expand // s.head_dim) \
+                * s.head_dim * s.d_state * 4.0 * 2
+        elif b == "rec":
+            kv += B * (cfg.rnn_width or D) * 4.0 * 2
+    weights = cfg.active_param_count() * 2.0 / tp
+    return weights + kv / chips
+
+
+def analyse(compiled, *, arch: str, shape_cfg, mesh_name: str, chips: int,
+            cfg) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    FLOPs/bytes/collectives come from the loop-aware HLO walk
+    (repro.launch.hlo_analysis) because XLA's flat cost_analysis counts
+    while bodies once; cost_analysis is kept as a cross-check field.
+    """
+    from repro.launch.hlo_analysis import analyse_hlo
+    t = analyse_hlo(compiled.as_text())
+    flops = t.flops
+    byts = t.bytes_fused
+    coll = {k: int(v) for k, v in t.coll_breakdown.items()}
+    mem = compiled.memory_analysis()
+    peak = None
+    if mem is not None:
+        peak = int(getattr(mem, "temp_size_in_bytes", 0)
+                   + getattr(mem, "argument_size_in_bytes", 0)
+                   + getattr(mem, "output_size_in_bytes", 0)
+                   - getattr(mem, "alias_size_in_bytes", 0))
+    return Roofline(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        coll_bytes_per_chip=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops(cfg, shape_cfg),
+        bytes_upper_per_chip=t.bytes_accessed,
+        bytes_floor_per_chip=hbm_floor_bytes(cfg, shape_cfg, chips),
+        peak_memory_bytes=peak,
+    )
+
+
+def fmt_row(r: Roofline) -> str:
+    return (f"{r.arch:<24} {r.shape:<12} {r.mesh:<6} "
+            f"{r.compute_s:>10.4f} {r.memory_s:>10.4f} "
+            f"{r.collective_s:>12.6f} {r.bottleneck:<10} "
+            f"{r.useful_flops_ratio:>7.3f} "
+            f"{(r.peak_memory_bytes or 0)/2**30:>8.2f}GiB")
+
+
+HEADER = (f"{'arch':<24} {'shape':<12} {'mesh':<6} "
+          f"{'compute_s':>10} {'memory_s':>10} {'collective_s':>12} "
+          f"{'bottleneck':<10} {'useful':>7} {'peak/dev':>11}")

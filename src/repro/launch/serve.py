@@ -1,0 +1,103 @@
+"""Split-policy serving launcher (the paper's pipeline on an assigned LLM).
+
+Partitions a transformer at a super-block boundary, quantises the
+boundary activation with a wire codec, and measures end-to-end decision
+latency for split vs server-only execution across a bandwidth sweep —
+the paper's Table 5 protocol with the model as the workload.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --edge-segments 1 --codec uint8 --bandwidths 10,25,50,100
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.wire import get_codec
+from repro.models.registry import get_model
+from repro.serving.client import DecisionLoop, EdgeClient
+from repro.serving.netsim import shaped
+from repro.serving.server import PolicyServer
+
+
+def build_split(arch: str, *, reduced: bool, edge_segments: int,
+                codec_name: str, batch: int, seq: int):
+    cfg, model = get_model(arch, reduced=reduced)
+    if cfg.family == "audio":
+        raise SystemExit("use the whisper enc/dec split example instead")
+    params = model.init(jax.random.PRNGKey(0))
+    edge_p, server_p = model.split_params(params, edge_segments)
+    codec = get_codec(codec_name)
+
+    @jax.jit
+    def edge_fn(tokens):
+        h = model.edge_forward(edge_p, tokens)
+        return codec.encode(h)
+
+    @jax.jit
+    def server_fn(payload):
+        h = codec.decode(payload, dtype=cfg.jnp_dtype)
+        return model.server_forward(server_p, h)
+
+    @jax.jit
+    def monolith_fn(tokens):
+        logits, _ = model.forward(params, tokens)
+        return logits
+
+    tokens = jnp.zeros((batch, seq), jnp.int32)
+    hidden_shape = (batch, seq, cfg.d_model)
+    wire = codec.wire_bytes(hidden_shape)
+    raw = batch * seq * 4     # server-only sends raw token ids (4B each)
+    # NOTE: for LLM serving the "raw observation" is tiny (token ids), so
+    # the interesting split trade-off is the *reverse* of the RL case at
+    # the first boundary; the pod-boundary use (DESIGN.md §2) transmits
+    # hidden states because the server half holds the heavy weights.
+    return (cfg, edge_fn, server_fn, monolith_fn, tokens, wire, raw)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--edge-segments", type=int, default=1)
+    ap.add_argument("--codec", default="uint8")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--bandwidths", default="10,25,50,100")
+    args = ap.parse_args(argv)
+
+    (cfg, edge_fn, server_fn, monolith_fn, tokens, wire_bytes,
+     raw_bytes) = build_split(
+        args.arch, reduced=args.reduced, edge_segments=args.edge_segments,
+        codec_name=args.codec, batch=args.batch, seq=args.seq)
+
+    client = EdgeClient(encode_fn=edge_fn, wire_bytes=wire_bytes)
+    j = client.measure(tokens)
+    payload = edge_fn(tokens)
+    server = PolicyServer(serve_fn=server_fn)
+    s_split = server.measure(payload)
+    mono = PolicyServer(serve_fn=monolith_fn)
+    s_mono = mono.measure(tokens)
+
+    print(f"{args.arch} split@{args.edge_segments} codec={args.codec}: "
+          f"edge {j*1e3:.1f}ms server {s_split*1e3:.1f}ms "
+          f"monolith {s_mono*1e3:.1f}ms wire {wire_bytes}B raw {raw_bytes}B")
+    print(f"{'Mb/s':>8} {'server-only(ms)':>16} {'split(ms)':>11}")
+    for mbps in [float(x) for x in args.bandwidths.split(",")]:
+        so = DecisionLoop(link=shaped(mbps), server_time_s=s_mono,
+                          split=False, payload_bytes=raw_bytes)
+        sp = DecisionLoop(link=shaped(mbps), server_time_s=s_split,
+                          split=True, edge_time_s=j,
+                          payload_bytes=wire_bytes)
+        print(f"{mbps:>8.0f} {so.median_latency(100)*1e3:>16.1f} "
+              f"{sp.median_latency(100)*1e3:>11.1f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,214 @@
+"""Step-function builders: (arch x shape x mesh) -> jit-able step with
+explicit in/out shardings, plus the abstract inputs to lower it with.
+
+One bundle per shape kind:
+
+  train_4k     -> train_step(params, opt_state, batch) (loss+grad+adam)
+  prefill_32k  -> prefill_step(params, batch) -> last-position logits
+  decode_32k / long_500k -> serve_step(params, token, caches, index)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.models import sharding as shd
+from repro.models.config import ArchConfig
+from repro.models.registry import (abstract_params, build_model,
+                                   input_specs_for, long_ctx)
+from repro.train.optimizer import Optimizer, OptState, adamw
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: tuple                 # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+    def lower(self, mesh: Mesh):
+        with mesh:
+            jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                             out_shardings=self.out_shardings,
+                             donate_argnums=self.donate_argnums)
+            return jitted.lower(*self.args)
+
+
+# overrides consumed by the step builder rather than ArchConfig
+STEP_KEYS = ("microbatches", "param_mode")
+
+
+def _apply_overrides(cfg: ArchConfig, overrides: Optional[dict]):
+    if not overrides:
+        return cfg, {}
+    step_opts = {k: v for k, v in overrides.items() if k in STEP_KEYS}
+    arch_over = {k: v for k, v in overrides.items() if k not in STEP_KEYS}
+    return (dataclasses.replace(cfg, **arch_over) if arch_over else cfg,
+            step_opts)
+
+
+def _replicated_like(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def make_step(arch_id: str, shape_id: str, mesh: Mesh, *,
+              overrides: Optional[dict] = None,
+              optimizer: Optional[Optimizer] = None) -> StepBundle:
+    shape = SHAPES[shape_id]
+    if shape.kind == "train":
+        return make_train_step(arch_id, shape_id, mesh, overrides=overrides,
+                               optimizer=optimizer)
+    if shape.kind == "prefill":
+        return make_prefill_step(arch_id, shape_id, mesh,
+                                 overrides=overrides)
+    return make_decode_step(arch_id, shape_id, mesh, overrides=overrides)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(arch_id: str, shape_id: str, mesh: Mesh, *,
+                    overrides: Optional[dict] = None,
+                    optimizer: Optional[Optimizer] = None) -> StepBundle:
+    cfg, step_opts = _apply_overrides(get_config(arch_id), overrides)
+    model = build_model(cfg)
+    optimizer = optimizer or adamw(3e-4, clip_norm=1.0)
+
+    shape = SHAPES[shape_id]
+    n_micro = int(step_opts.get("microbatches", 1))
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: model.loss(p, batch, remat=cfg.remat),
+            has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        with shd.activation_sharding(
+                mesh, shape.global_batch // max(n_micro, 1)):
+            if n_micro <= 1:
+                (loss, aux), grads = grads_of(params, batch)
+            else:
+                # §Perf: gradient accumulation — peak activation memory
+                # scales with the microbatch, grads/optimizer unchanged
+                micro = jax.tree.map(
+                    lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                        + x.shape[1:]), batch)
+
+                def acc(carry, mb):
+                    (l, a), g = grads_of(params, mb)
+                    return jax.tree.map(jnp.add, carry, ((l, a), g)), None
+
+                zero = jax.eval_shape(lambda: grads_of(params, jax.tree.map(
+                    lambda x: x[0], micro)))
+                zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                    zero)
+                ((loss, aux), grads), _ = jax.lax.scan(acc, zero, micro)
+                scale = 1.0 / n_micro
+                loss = loss * scale
+                aux = jax.tree.map(lambda x: x * scale, aux)
+                grads = jax.tree.map(lambda g: g * scale, grads)
+            new_params, new_opt = optimizer.update(params, opt_state, grads)
+        metrics = {"loss": loss, **{k: v for k, v in aux.items()}}
+        return new_params, new_opt, metrics
+
+    params_s = abstract_params(model)
+    opt_s = jax.eval_shape(optimizer.init, params_s)
+    batch_s = input_specs_for(cfg, shape)["batch"]
+
+    pmode = step_opts.get("param_mode", "fsdp_tp")
+    p_sh = shd.param_shardings(params_s, mesh, mode=pmode)
+    o_sh = OptState(shd.replicated(mesh),
+                    shd.param_shardings(opt_s.mu, mesh, mode=pmode),
+                    shd.param_shardings(opt_s.nu, mesh, mode=pmode))
+    b_sh = jax.tree.map(
+        lambda x: NamedSharding(
+            mesh, shd.data_spec(mesh, len(x.shape), x.shape[0])), batch_s)
+
+    return StepBundle(
+        name=f"train:{arch_id}:{shape_id}",
+        fn=train_step,
+        args=(params_s, opt_s, batch_s),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(arch_id: str, shape_id: str, mesh: Mesh, *,
+                      overrides: Optional[dict] = None) -> StepBundle:
+    cfg, step_opts = _apply_overrides(get_config(arch_id), overrides)
+    model = build_model(cfg)
+
+    shape = SHAPES[shape_id]
+
+    def prefill_step(params, batch):
+        with shd.activation_sharding(mesh, shape.global_batch):
+            logits, _ = model.forward(
+                params, batch.get("tokens"),
+                frontend_embeds=batch.get("frontend_embeds"),
+                remat=cfg.remat)
+        return logits[:, -1]     # next-token logits; full (B,S,V) would be
+                                 # a multi-hundred-GB output at 32k
+
+    params_s = abstract_params(model)
+    batch_s = input_specs_for(cfg, shape)["batch"]
+    p_sh = shd.param_shardings(params_s, mesh,
+                               mode=step_opts.get("param_mode", "fsdp_tp"))
+    b_sh = jax.tree.map(
+        lambda x: NamedSharding(
+            mesh, shd.data_spec(mesh, len(x.shape), x.shape[0])), batch_s)
+
+    return StepBundle(
+        name=f"prefill:{arch_id}:{shape_id}",
+        fn=prefill_step,
+        args=(params_s, batch_s),
+        in_shardings=(p_sh, b_sh),
+        out_shardings=None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def make_decode_step(arch_id: str, shape_id: str, mesh: Mesh, *,
+                     overrides: Optional[dict] = None) -> StepBundle:
+    cfg, step_opts = _apply_overrides(get_config(arch_id), overrides)
+    model = build_model(cfg)
+    shape = SHAPES[shape_id]
+    lc = long_ctx(shape_id)
+
+    def serve_step(params, token, caches, index):
+        with shd.activation_sharding(mesh, shape.global_batch):
+            logits, new_caches = model.decode_step(params, token, caches,
+                                                   index, long_ctx=lc)
+        return logits, new_caches
+
+    params_s = abstract_params(model)
+    spec = input_specs_for(cfg, shape)
+    p_sh = shd.param_shardings(params_s, mesh,
+                               mode=step_opts.get("param_mode", "fsdp_tp"))
+    t_sh = NamedSharding(mesh, shd.data_spec(mesh, 2, shape.global_batch))
+    c_sh = shd.cache_shardings(spec["caches"], mesh, shape.global_batch)
+    i_sh = shd.replicated(mesh)
+
+    return StepBundle(
+        name=f"decode:{arch_id}:{shape_id}",
+        fn=serve_step,
+        args=(params_s, spec["token"], spec["caches"], spec["index"]),
+        in_shardings=(p_sh, t_sh, c_sh, i_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+    )

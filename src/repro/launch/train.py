@@ -1,0 +1,60 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+      --steps 100 --batch 4 --seq 128
+
+``--reduced`` trains the CPU-scale variant of the arch family (the full
+configs are exercised via the dry-run); on a real TPU cluster the same
+entrypoint builds the production mesh and shards with the path rules.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.configs import ARCHS
+from repro.data import frontend_batches, lm_batches
+from repro.models.registry import get_model
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    cfg, model = get_model(args.arch, reduced=args.reduced)
+    tcfg = TrainConfig(batch=args.batch, steps=args.steps, lr=args.lr,
+                       ckpt_dir=args.ckpt)
+    trainer = Trainer(cfg, tcfg)
+
+    tokens = lm_batches(cfg.vocab, args.batch, args.seq)
+    if cfg.family in ("vlm", "audio"):
+        fronts = frontend_batches(args.batch, cfg.n_frontend_tokens,
+                                  cfg.d_model)
+        data = ({"tokens": next(tokens)["tokens"],
+                 "frontend_embeds": next(fronts)} for _ in iter(int, 1))
+    else:
+        data = tokens
+
+    print(f"training {args.arch} (reduced={args.reduced}) "
+          f"on {jax.devices()} for {args.steps} steps")
+    _, _, history = trainer.run(
+        data, hook=lambda i, m: print(
+            f"  step {i:>5} loss {m['loss']:.4f} wall {m['wall_s']:.1f}s"))
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f}")
+    return 0 if last < first else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,209 @@
+"""Transformer block zoo: attn / swa / rec (RG-LRU) / ssm (Mamba-2) blocks
+with a uniform (init, apply, decode, cache) interface, composed by
+repro.models.transformer according to ArchConfig.pattern.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, SSMArch
+from repro.nn.attention import (AttentionConfig, attention, attention_init,
+                                decode_attention, init_kv_cache)
+from repro.nn.layers import (dense, dense_init, gelu_mlp, gelu_mlp_init,
+                             layernorm, layernorm_init, rmsnorm,
+                             rmsnorm_init, swiglu, swiglu_init)
+from repro.nn.module import KeyGen
+from repro.nn.moe import MoEConfig, moe_apply, moe_init
+from repro.nn.rglru import (RGLRUConfig, rglru_decode_step, rglru_forward,
+                            rglru_init, rglru_init_state)
+from repro.nn.ssm import (SSMConfig, ssm_decode_step, ssm_forward, ssm_init,
+                          ssm_init_state)
+
+
+# ---------------------------------------------------------------------------
+# config adapters
+# ---------------------------------------------------------------------------
+
+def attn_config(cfg: ArchConfig, kind: str, *,
+                long_ctx: bool = False) -> AttentionConfig:
+    window = None
+    if kind == "swa":
+        window = cfg.sliding_window
+    elif long_ctx:
+        # dense archs run long_500k with a sliding-window variant
+        window = cfg.long_context_window
+    return AttentionConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        rope_theta=cfg.rope_theta, sliding_window=window,
+        attn_logit_softcap=cfg.logit_softcap,
+        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        skip_masked_blocks=cfg.attn_skip_masked_blocks,
+        windowed_decode_gather=cfg.windowed_decode_gather,
+        masked_cache_update=cfg.masked_cache_update)
+
+
+def moe_config(cfg: ArchConfig) -> MoEConfig:
+    e = cfg.moe
+    pad = 0
+    if cfg.moe_pad_experts:
+        pad = -(-e.n_experts // 16) * 16   # next multiple of the data axis
+    return MoEConfig(d_model=cfg.d_model, d_ff_expert=cfg.d_ff,
+                     n_experts=e.n_experts, top_k=e.top_k,
+                     n_shared_experts=e.n_shared_experts,
+                     shared_expert_gate=e.shared_expert_gate,
+                     capacity_factor=e.capacity_factor,
+                     group_size=cfg.moe_group_size,
+                     pad_experts_to=pad,
+                     expert_parallel=cfg.moe_expert_parallel,
+                     dispatch_bf16=cfg.moe_dispatch_bf16)
+
+
+def ssm_config(cfg: ArchConfig) -> SSMConfig:
+    s = cfg.ssm or SSMArch()
+    return SSMConfig(d_model=cfg.d_model, d_state=s.d_state,
+                     head_dim=s.head_dim, expand=s.expand,
+                     n_groups=s.n_groups, conv_width=s.conv_width,
+                     chunk=s.chunk)
+
+
+def rglru_config(cfg: ArchConfig) -> RGLRUConfig:
+    return RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.rnn_width)
+
+
+# ---------------------------------------------------------------------------
+# norms / mlps
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ArchConfig, dtype):
+    return (rmsnorm_init(cfg.d_model, dtype) if cfg.norm == "rmsnorm"
+            else layernorm_init(cfg.d_model, dtype))
+
+
+def norm_apply(cfg: ArchConfig, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+def mlp_init(key, cfg: ArchConfig, dtype):
+    if cfg.mlp in ("swiglu", "geglu"):
+        return swiglu_init(key, cfg.d_model, cfg.d_ff, dtype=dtype)
+    return gelu_mlp_init(key, cfg.d_model, cfg.d_ff,
+                         use_bias=cfg.mlp == "gelu", dtype=dtype)
+
+
+def mlp_apply(cfg: ArchConfig, p, x):
+    if cfg.mlp == "swiglu":
+        return swiglu(p, x)
+    if cfg.mlp == "geglu":
+        g = jax.nn.gelu(dense(p["gate"], x))
+        return dense(p["down"], g * dense(p["up"], x))
+    if cfg.mlp == "relu2":  # minitron/nemotron: squared ReLU, no gate
+        h = jax.nn.relu(dense(p["up"], x))
+        return dense(p["down"], h * h)
+    return gelu_mlp(p, x)
+
+
+# ---------------------------------------------------------------------------
+# block init / apply / decode / cache
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ArchConfig, kind: str, dtype):
+    kg = KeyGen(key)
+    if kind in ("attn", "swa"):
+        p = {
+            "norm1": norm_init(cfg, dtype),
+            "attn": attention_init(kg(), attn_config(cfg, kind), dtype=dtype),
+            "norm2": norm_init(cfg, dtype),
+        }
+        if cfg.moe is not None:
+            p["moe"] = moe_init(kg(), moe_config(cfg), dtype=dtype)
+        else:
+            p["mlp"] = mlp_init(kg(), cfg, dtype)
+        return p
+    if kind == "rec":
+        return {
+            "norm1": norm_init(cfg, dtype),
+            "rglru": rglru_init(kg(), rglru_config(cfg), dtype=dtype),
+            "norm2": norm_init(cfg, dtype),
+            "mlp": mlp_init(kg(), cfg, dtype),
+        }
+    if kind == "ssm":
+        return {
+            "norm": norm_init(cfg, dtype),
+            "ssm": ssm_init(kg(), ssm_config(cfg), dtype=dtype),
+        }
+    raise ValueError(kind)
+
+
+def block_apply(params, cfg: ArchConfig, kind: str, x, *,
+                long_ctx: bool = False):
+    """Full-sequence forward.  Returns (x, aux)."""
+    aux = {}
+    if kind in ("attn", "swa"):
+        acfg = attn_config(cfg, kind, long_ctx=long_ctx)
+        x = x + attention(params["attn"], acfg, norm_apply(cfg, params["norm1"], x))
+        h = norm_apply(cfg, params["norm2"], x)
+        if cfg.moe is not None:
+            y, aux = moe_apply(params["moe"], moe_config(cfg), h)
+        else:
+            y = mlp_apply(cfg, params["mlp"], h)
+        return x + y, aux
+    if kind == "rec":
+        rcfg = rglru_config(cfg)
+        x = x + rglru_forward(params["rglru"], rcfg,
+                              norm_apply(cfg, params["norm1"], x))
+        y = mlp_apply(cfg, params["mlp"],
+                      norm_apply(cfg, params["norm2"], x))
+        return x + y, aux
+    if kind == "ssm":
+        scfg = ssm_config(cfg)
+        return x + ssm_forward(params["ssm"], scfg,
+                               norm_apply(cfg, params["norm"], x)), aux
+    raise ValueError(kind)
+
+
+def block_init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                     dtype):
+    if kind in ("attn", "swa"):
+        return init_kv_cache(attn_config(cfg, kind), batch, max_len, dtype)
+    if kind == "rec":
+        return rglru_init_state(rglru_config(cfg), batch, jnp.float32)
+    if kind == "ssm":
+        return ssm_init_state(ssm_config(cfg), batch, jnp.float32)
+    raise ValueError(kind)
+
+
+def block_decode(params, cfg: ArchConfig, kind: str, x, cache, index, *,
+                 long_ctx: bool = False):
+    """One-token decode.  Returns (x, new_cache)."""
+    if kind in ("attn", "swa"):
+        acfg = attn_config(cfg, kind, long_ctx=long_ctx)
+        h, cache = decode_attention(params["attn"], acfg,
+                                    norm_apply(cfg, params["norm1"], x),
+                                    cache, index)
+        x = x + h
+        hh = norm_apply(cfg, params["norm2"], x)
+        if cfg.moe is not None:
+            y, _ = moe_apply(params["moe"], moe_config(cfg), hh)
+        else:
+            y = mlp_apply(cfg, params["mlp"], hh)
+        return x + y, cache
+    if kind == "rec":
+        rcfg = rglru_config(cfg)
+        h, cache = rglru_decode_step(params["rglru"], rcfg,
+                                     norm_apply(cfg, params["norm1"], x),
+                                     cache)
+        x = x + h
+        y = mlp_apply(cfg, params["mlp"],
+                      norm_apply(cfg, params["norm2"], x))
+        return x + y, cache
+    if kind == "ssm":
+        scfg = ssm_config(cfg)
+        h, cache = ssm_decode_step(params["ssm"], scfg,
+                                   norm_apply(cfg, params["norm"], x), cache)
+        return x + h, cache
+    raise ValueError(kind)

@@ -1,0 +1,97 @@
+"""--arch <id> -> model instance; --shape <id> -> abstract input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of
+the given (architecture, input-shape) pair: weak-type-correct, shardable,
+and allocation-free, so the production mesh can be dry-run on any host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.transformer import DecoderModel
+from repro.models.whisper import WhisperModel
+
+Model = Union[DecoderModel, WhisperModel]
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "audio":
+        return WhisperModel(cfg)
+    return DecoderModel(cfg)
+
+
+def get_model(arch_id: str, *, reduced: bool = False) -> tuple[ArchConfig,
+                                                               Model]:
+    cfg = get_config(arch_id)
+    if reduced:
+        cfg = cfg.reduced()
+    return cfg, build_model(cfg)
+
+
+def abstract_params(model: Model) -> Any:
+    """Parameter ShapeDtypeStructs without allocating anything."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(model.init, key)
+
+
+def text_len(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Token positions left for text once frontend tokens are prepended.
+
+    VLM patch tokens share the sequence budget; the audio encoder's frames
+    live in the encoder, so whisper keeps the full decoder length.
+    """
+    if cfg.family == "vlm":
+        return shape.seq_len - cfg.n_frontend_tokens
+    return shape.seq_len
+
+
+def _frontend_spec(cfg: ArchConfig, batch: int):
+    return jax.ShapeDtypeStruct((batch, cfg.n_frontend_tokens, cfg.d_model),
+                                jnp.bfloat16)
+
+
+def input_specs(arch_id: str, shape_id: str) -> dict[str, Any]:
+    """Abstract inputs for the step the shape lowers.
+
+    train/prefill: {"batch": {tokens[, frontend_embeds]}}
+    decode:        {"token", "caches", "index"}
+    """
+    return input_specs_for(get_config(arch_id), SHAPES[shape_id])
+
+
+def input_specs_for(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    B = shape.global_batch
+
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, text_len(cfg, shape)),
+                                           jnp.int32)
+        }
+        if cfg.family in ("vlm", "audio"):
+            batch["frontend_embeds"] = _frontend_spec(cfg, B)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len-deep cache
+    decode_model = build_model(cfg)
+    caches = jax.eval_shape(
+        lambda: decode_model.init_cache(B, shape.seq_len, jnp.bfloat16))
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "caches": caches,
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def long_ctx(shape_id: str) -> bool:
+    return shape_id == "long_500k"
+
+
+ARCH_IDS = tuple(sorted(
+    __import__("repro.configs", fromlist=["ARCHS"]).ARCHS))
+SHAPE_IDS = ("train_4k", "prefill_32k", "decode_32k", "long_500k")

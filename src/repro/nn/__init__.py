@@ -1,0 +1,1 @@
+"""Neural-network substrate: functional layers over param pytrees."""

@@ -1,0 +1,346 @@
+"""Multi-head attention with GQA, qk-norm, optional bias, sliding windows,
+cross-attention, and a decode KV cache.
+
+Shapes follow (B, S, H, D) convention internally; the public API takes
+(B, S, d_model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.constrain import constrain
+from repro.nn.layers import dense, dense_init, rmsnorm, rmsnorm_init
+from repro.nn.module import KeyGen
+from repro.nn.rotary import apply_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False          # qwen2.5 style
+    qk_norm: bool = False           # qwen3 style (RMSNorm over head_dim)
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    sliding_window: Optional[int] = None  # None => full causal
+    causal: bool = True             # False for encoder self-attention
+    attn_logit_softcap: Optional[float] = None
+    # implementation knobs (not architecture):
+    chunked_threshold: int = 2048   # S above which the online-softmax
+                                    # chunked path replaces naive S^2 scores
+    block_q: int = 512
+    block_k: int = 512
+    # perf (§Perf): decode with a sliding window gathers only the window
+    # from the cache instead of masking the full S_max scores
+    windowed_decode_gather: bool = False
+    # perf (§Perf): skip fully-masked KV chunks in the chunked path
+    # (causal upper triangle / outside the sliding-window band)
+    skip_masked_blocks: bool = False
+    # perf (§Perf): update the KV cache with a masked where() instead of
+    # dynamic-update-slice — a DUS on a sharded sequence axis triggers
+    # GSPMD "involuntary full rematerialization" (a full cache gather per
+    # token); the masked form updates each shard locally
+    masked_cache_update: bool = False
+
+
+def attention_init(key, cfg: AttentionConfig, *, dtype=jnp.float32):
+    kg = KeyGen(key)
+    p = {
+        "wq": dense_init(kg(), cfg.d_model, cfg.n_heads * cfg.head_dim,
+                         use_bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(kg(), cfg.d_model, cfg.n_kv_heads * cfg.head_dim,
+                         use_bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(kg(), cfg.d_model, cfg.n_kv_heads * cfg.head_dim,
+                         use_bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(kg(), cfg.n_heads * cfg.head_dim, cfg.d_model,
+                         use_bias=False, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim, dtype)
+    return p
+
+
+def _project_qkv(params, cfg: AttentionConfig, x, positions):
+    B, S, _ = x.shape
+    q = dense(params["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = dense(params["wk"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = dense(params["wv"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+    bshd = ("batch", None, "model", None)
+    return constrain(q, bshd), constrain(k, bshd), constrain(v, bshd)
+
+
+def _repeat_kv(x, n_rep: int):
+    if n_rep == 1:
+        return x
+    B, S, KV, D = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (B, S, KV, n_rep, D)).reshape(
+        B, S, KV * n_rep, D)
+
+
+def _scores_to_out(cfg, q, k, v, mask, *, seq_sharded: bool = False):
+    """q: (B,Sq,H,D); k,v: (B,Skv,H,D); mask broadcastable to (B,H,Sq,Skv).
+
+    ``seq_sharded`` pins the score matrix's KV axis to the "model" mesh
+    axis (decode with a sequence-sharded cache): the softmax then lowers
+    to a distributed reduction and the AV contraction to a small psum,
+    instead of GSPMD regathering the full cache per token.
+    """
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if seq_sharded:
+        logits = constrain(logits, ("batch", None, None, "model"))
+    if cfg.attn_logit_softcap is not None:
+        c = cfg.attn_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    # explicit max-subtracted softmax: the reductions over the sharded KV
+    # axis lower to tiny all-reduces of the (B,H,Sq) statistics
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m)
+    probs = (p / p.sum(axis=-1, keepdims=True)).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def make_attention_mask(cfg: AttentionConfig, q_len: int, kv_len: int,
+                        q_offset: int = 0) -> Optional[jnp.ndarray]:
+    """(1,1,q_len,kv_len) boolean mask: True = attend."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    kv_pos = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if cfg.causal:
+        mask &= kv_pos <= q_pos
+    if cfg.sliding_window is not None:
+        mask &= kv_pos > q_pos - cfg.sliding_window
+    return mask[None, None]
+
+
+def attention(params, cfg: AttentionConfig, x, *, positions=None,
+              mask=None):
+    """Full-sequence self-attention (training / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    k = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+    v = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+    if S > cfg.chunked_threshold and mask is None:
+        out = chunked_attention(cfg, q, k, v)
+    else:
+        if mask is None:
+            mask = make_attention_mask(cfg, S, S)
+        out = _scores_to_out(cfg, q, k, v, mask)
+    out = constrain(out, ("batch", None, "model", None))
+    return dense(params["wo"], out.reshape(B, S, -1))
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (pure XLA "flash"): never materialises
+# the (S, S) score matrix.  Used for training/prefill above
+# ``chunked_threshold``; the Pallas kernel (repro.kernels.flash_attention)
+# is the TPU fast path with identical semantics.
+# ---------------------------------------------------------------------------
+
+_NEG = -0.5 * float(jnp.finfo(jnp.float32).max)
+
+
+def _chunk_q_block(cfg: AttentionConfig, q_blk, k, v, q_lo, kv_lo: int = 0):
+    """One q-chunk against the given KV range with an online softmax.
+
+    q_blk: (B, bq, H, D); k, v: (B, Skv', H, D) (a slice starting at global
+    position ``kv_lo``); q_lo: first query position (may be traced).
+    """
+    B, bq, H, D = q_blk.shape
+    Skv = k.shape[1]
+    bk = min(cfg.block_k, Skv)
+    n_k = Skv // bk
+    scale = cfg.head_dim ** -0.5
+    qf = q_blk.astype(jnp.float32) * scale
+    q_pos = q_lo + jnp.arange(bq)
+
+    def body(carry, ik):
+        m, l, acc = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k, ik * bk, bk, 1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, ik * bk, bk, 1)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf,
+                            k_blk.astype(jnp.float32))
+        if cfg.attn_logit_softcap is not None:
+            c = cfg.attn_logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        kv_pos = kv_lo + ik * bk + jnp.arange(bk)
+        msk = jnp.ones((bq, bk), bool)
+        if cfg.causal:
+            msk &= kv_pos[None, :] <= q_pos[:, None]
+        if cfg.sliding_window is not None:
+            msk &= kv_pos[None, :] > q_pos[:, None] - cfg.sliding_window
+        logits = jnp.where(msk[None, None], logits, _NEG)
+        new_m = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - new_m[..., None]) * msk[None, None]
+        alpha = jnp.exp(m - new_m)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_blk.astype(jnp.float32))
+        return (new_m, l, acc), None
+
+    m0 = constrain(jnp.full((B, H, bq), _NEG, jnp.float32),
+                   ("batch", "model", None))
+    l0 = constrain(jnp.zeros((B, H, bq), jnp.float32),
+                   ("batch", "model", None))
+    a0 = constrain(jnp.zeros((B, H, bq, D), jnp.float32),
+                   ("batch", "model", None, None))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_k))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2)           # (B, bq, H, D)
+
+
+def chunked_attention(cfg: AttentionConfig, q, k, v):
+    """q, k, v: (B, S, H, D) (kv already GQA-repeated) -> (B, S, H, D).
+
+    Baseline: lax.scan over q-chunks, every q-chunk visits every KV chunk
+    (mask kills the upper triangle but the FLOPs are spent).  With
+    ``cfg.skip_masked_blocks`` the q-loop is unrolled with *static* per-chunk
+    KV bounds, so causal/sliding-window skipping shows up in the compiled
+    FLOP count (§Perf).
+    """
+    B, S, H, D = q.shape
+    bq = min(cfg.block_q, S)
+    assert S % bq == 0, f"S={S} not tiled by block_q={bq}"
+    bk = min(cfg.block_k, S)
+    n_q = S // bq
+    qc = q.reshape(B, n_q, bq, H, D)
+
+    if cfg.skip_masked_blocks:
+        outs = []
+        for iq in range(n_q):
+            q_lo = iq * bq
+            lo = 0
+            if cfg.sliding_window is not None:
+                lo = max(q_lo - cfg.sliding_window + 1, 0) // bk
+            hi = min((q_lo + bq - 1) // bk + 1, S // bk) if cfg.causal \
+                else S // bk
+            blk = jax.checkpoint(_chunk_q_block, static_argnums=(0, 5))
+            outs.append(blk(cfg, qc[:, iq], k[:, lo * bk:hi * bk],
+                            v[:, lo * bk:hi * bk], q_lo, lo * bk))
+        out = jnp.stack(outs, axis=1).reshape(B, S, H, D)
+        return out.astype(q.dtype)
+
+    blk = jax.checkpoint(lambda qb, lo: _chunk_q_block(cfg, qb, k, v, lo))
+
+    def body(_, iq):
+        qb = jax.lax.dynamic_index_in_dim(qc, iq, 1, keepdims=False)
+        return None, blk(qb, iq * bq)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_q))  # (n_q,B,bq,H,D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (Whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention(params, cfg: AttentionConfig, x, kv_src=None, *,
+                    k=None, v=None):
+    """kv_src: (B, S_enc, d_model) encoder output (no rope, no mask), or
+    precomputed k/v (decode path reuses cached cross-KV)."""
+    B, Sq, _ = x.shape
+    q = dense(params["wq"], x).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+    if k is None:
+        k, v = cross_kv(params, cfg, kv_src)
+    k = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+    v = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+    out = _scores_to_out(cfg, q, k, v, None)
+    return dense(params["wo"], out.reshape(B, Sq, -1))
+
+
+def cross_kv(params, cfg: AttentionConfig, kv_src):
+    B, Skv, _ = kv_src.shape
+    k = dense(params["wk"], kv_src).reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    v = dense(params["wv"], kv_src).reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode path with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: AttentionConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def decode_attention(params, cfg: AttentionConfig, x, cache, index):
+    """One-token decode step.
+
+    x: (B, 1, d_model); cache: {"k","v"} of (B, S_max, KV, D); index: scalar
+    int32 position of the new token.  Returns (out, new_cache).
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1, "decode_attention processes exactly one new token"
+    positions = jnp.broadcast_to(index[None, None], (B, 1)) \
+        if jnp.ndim(index) == 0 else index.reshape(B, 1)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions.astype(jnp.int32))
+    # at decode the per-token q/k/v are tiny: replicate them over "model"
+    # so they compose with however the cache is sharded (head-dim-sharded
+    # new entries meeting a sequence-sharded cache otherwise trigger a
+    # full cache regather per token)
+    rep = ("batch", None, None, None)
+    q = constrain(q, rep)
+    k_new = constrain(k_new, rep)
+    v_new = constrain(v_new, rep)
+
+    idx = jnp.asarray(index, jnp.int32).reshape(())
+    if cfg.masked_cache_update:
+        sel = (jnp.arange(cache["k"].shape[1]) == idx)[None, :, None, None]
+        k_cache = jnp.where(sel, k_new.astype(cache["k"].dtype), cache["k"])
+        v_cache = jnp.where(sel, v_new.astype(cache["v"].dtype), cache["v"])
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), idx, axis=1)
+    new_cache = {"k": k_cache, "v": v_cache}
+
+    S_max = k_cache.shape[1]
+    if (cfg.windowed_decode_gather and cfg.sliding_window is not None
+            and S_max > cfg.sliding_window):
+        # §Perf: read only the live window from the cache instead of
+        # scoring (and masking) all S_max cached positions.
+        W = cfg.sliding_window
+        start = jnp.clip(idx - W + 1, 0, S_max - W)
+        k_cmp = jax.lax.dynamic_slice_in_dim(k_cache, start, W, 1)
+        v_cmp = jax.lax.dynamic_slice_in_dim(v_cache, start, W, 1)
+        kv_pos = start + jnp.arange(W)
+    else:
+        k_cmp, v_cmp = k_cache, v_cache
+        kv_pos = jnp.arange(S_max)
+    valid = kv_pos <= idx
+    if cfg.sliding_window is not None:
+        valid &= kv_pos > idx - cfg.sliding_window
+    mask = valid[None, None, None, :]  # (1,1,1,S_kv)
+
+    k = _repeat_kv(k_cmp.astype(q.dtype), cfg.n_heads // cfg.n_kv_heads)
+    v = _repeat_kv(v_cmp.astype(q.dtype), cfg.n_heads // cfg.n_kv_heads)
+    out = _scores_to_out(cfg, q, k, v, mask,
+                         seq_sharded=cfg.masked_cache_update)
+    return dense(params["wo"], out.reshape(B, 1, -1)), new_cache

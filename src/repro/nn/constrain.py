@@ -1,0 +1,80 @@
+"""Activation sharding-constraint context (mesh-agnostic model code).
+
+Launch code enters ``activation_sharding(mesh, global_batch)``; layer code
+calls ``constrain(x, dims)`` with semantic dim names:
+
+  "batch" -> the data axes, iff that dim equals the global batch and the
+             axes divide it
+  "model" -> the "model" axis, iff it divides the dim
+  None    -> unconstrained
+
+Outside the context every call is a no-op, so tests and single-device
+runs never touch sharding machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, global_batch: int):
+    token = _ACT_CTX.set((mesh, global_batch))
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(token)
+
+
+def _data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def constrain(x, dims: Sequence[Optional[str]]):
+    ctx = _ACT_CTX.get()
+    if ctx is None or not hasattr(x, "ndim"):
+        return x
+    mesh, batch = ctx
+    if x.ndim != len(dims):
+        return x
+    parts: list = []
+    used: set[str] = set()
+    for name, size in zip(dims, x.shape):
+        part = None
+        if name == "batch":
+            axes = _data_axes(mesh)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if size == batch and size % n == 0 and not (set(axes) & used):
+                part = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+        elif name == "model":
+            if size % mesh.shape["model"] == 0 and size > 0 \
+                    and "model" not in used:
+                part = "model"
+                used.add("model")
+        elif name == "data":
+            # shard this dim over the data axis regardless of batch size
+            # (expert-parallel MoE uses this on the expert dim)
+            if size % mesh.shape["data"] == 0 and size > 0 \
+                    and "data" not in used:
+                part = "data"
+                used.add("data")
+        parts.append(part)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+
+def constrain_act(x):
+    """Batch-major hidden state: dim0 = batch, rest unconstrained."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or not hasattr(x, "ndim") or x.ndim == 0:
+        return x
+    return constrain(x, ("batch",) + (None,) * (x.ndim - 1))

@@ -1,0 +1,145 @@
+"""Core layers: dense, embedding, norms, conv2d (NHWC), MLP blocks."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.constrain import constrain
+from repro.nn.module import KeyGen, fan_in_init, normal_init
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, *, use_bias: bool = False,
+               dtype=jnp.float32, init=None):
+    init = init or fan_in_init()
+    p = {"kernel": init(key, (in_dim, out_dim), dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["kernel"]
+    if "bias" in params:
+        y = y + params["bias"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, dim: int, *, dtype=jnp.float32, stddev=0.02):
+    return {"embedding": normal_init(stddev)(key, (vocab, dim), dtype)}
+
+
+def embed(params, ids):
+    return jnp.take(params["embedding"], ids, axis=0)
+
+
+def unembed(params, x):
+    """Tied logits projection (vocab-sharded on the model axis)."""
+    return x @ params["embedding"].T
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Conv2D (NHWC, HWIO kernel) — used by MiniConv / Full-CNN RL encoders
+# ---------------------------------------------------------------------------
+
+def conv2d_init(key, kh: int, kw: int, c_in: int, c_out: int, *,
+                use_bias: bool = True, dtype=jnp.float32, init=None):
+    init = init or fan_in_init()
+    kernel = init(key, (kh, kw, c_in, c_out), dtype)
+    # fan-in for conv counts the receptive field
+    kernel = kernel / jnp.sqrt(jnp.asarray(kh * kw, dtype))
+    p = {"kernel": kernel}
+    if use_bias:
+        p["bias"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv2d(params, x, *, stride: int = 1, padding: str = "SAME"):
+    """x: (B, H, W, C_in) -> (B, H', W', C_out)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        params["kernel"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if "bias" in params:
+        y = y + params["bias"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU) and classic MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, *, dtype=jnp.float32):
+    kg = KeyGen(key)
+    return {
+        "gate": dense_init(kg(), d_model, d_ff, dtype=dtype),
+        "up": dense_init(kg(), d_model, d_ff, dtype=dtype),
+        "down": dense_init(kg(), d_ff, d_model, dtype=dtype),
+    }
+
+
+def _hidden_dims(x):
+    return ("batch",) + (None,) * (x.ndim - 2) + ("model",)
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(dense(params["gate"], x))
+    u = dense(params["up"], x)
+    h = constrain(g * u, _hidden_dims(x))
+    return dense(params["down"], h)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, *, use_bias: bool = True,
+                  dtype=jnp.float32):
+    kg = KeyGen(key)
+    return {
+        "up": dense_init(kg(), d_model, d_ff, use_bias=use_bias, dtype=dtype),
+        "down": dense_init(kg(), d_ff, d_model, use_bias=use_bias, dtype=dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = constrain(jax.nn.gelu(dense(params["up"], x)), _hidden_dims(x))
+    return dense(params["down"], h)

@@ -1,0 +1,128 @@
+"""Minimal functional module substrate.
+
+Parameters are plain nested dicts of jnp arrays (pytrees).  Every layer in
+``repro.nn`` exposes ``init(key, ...) -> params`` and a pure ``apply`` (usually
+just a function taking ``(params, x, ...)``).  Sharding is attached *outside*
+the model code via path-based rules (see :mod:`repro.models.sharding`), which
+keeps the model definitions mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of arrays
+Initializer = Callable[[jax.Array, tuple, Any], jax.Array]
+
+
+class KeyGen:
+    """Splittable PRNG key stream: ``kg = KeyGen(key); k1 = kg(); k2 = kg()``."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def split(self, n: int) -> jax.Array:
+        self._key, *subs = jax.random.split(self._key, n + 1)
+        return jnp.stack(subs)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(stddev: float = 0.02) -> Initializer:
+    def init(key, shape, dtype=jnp.float32):
+        return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+    return init
+
+
+def fan_in_init(scale: float = 1.0, fan_axis: int = 0) -> Initializer:
+    """LeCun-style fan-in scaled normal (default for projection matrices)."""
+
+    def init(key, shape, dtype=jnp.float32):
+        fan_in = shape[fan_axis] if shape else 1
+        std = scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+
+    return init
+
+
+def orthogonal_init(scale: float = 1.0) -> Initializer:
+    def init(key, shape, dtype=jnp.float32):
+        return jax.nn.initializers.orthogonal(scale)(key, shape, dtype)
+
+    return init
+
+
+def zeros_init() -> Initializer:
+    def init(key, shape, dtype=jnp.float32):
+        return jnp.zeros(shape, dtype)
+
+    return init
+
+
+def ones_init() -> Initializer:
+    def init(key, shape, dtype=jnp.float32):
+        return jnp.ones(shape, dtype)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers
+# ---------------------------------------------------------------------------
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def tree_paths(params: Params) -> Iterator[tuple[str, Any]]:
+    """Yield ('a/b/c', leaf) pairs for a nested-dict pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        yield "/".join(keys), leaf
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params,
+    )
+
+
+def stack_init(init_fn: Callable[[jax.Array], Params], keys: jax.Array) -> Params:
+    """vmap an init function over a stacked leading (layer) dimension."""
+    return jax.vmap(init_fn)(keys)
+
+
+@dataclasses.dataclass
+class ShapeOnly:
+    """Marker used by dry-run init: produce ShapeDtypeStructs, not arrays."""
+
+    dtype: Any = jnp.float32
+
+
+def abstract_init(init_fn: Callable[..., Params], *args, **kwargs) -> Params:
+    """Run an init function under eval_shape (no FLOPs, no allocation)."""
+    return jax.eval_shape(init_fn, *args, **kwargs)

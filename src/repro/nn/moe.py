@@ -1,0 +1,177 @@
+"""Mixture-of-Experts layer with capacity-based dispatch.
+
+Expert weights are stacked on a leading expert dimension which the sharding
+rules place on the ``model`` mesh axis (expert parallelism); the dispatch /
+combine einsums then lower to all-to-all style collectives under GSPMD.
+
+Supports the two assigned MoE archs:
+  * llama4-scout : 16 routed experts, top-1, + 1 shared expert (every layer)
+  * qwen2-moe    : 60 routed experts, top-4, + 4 shared experts (fused as one
+                   dense SwiGLU with 4x expert width) and a shared-expert gate
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.constrain import constrain
+from repro.nn.layers import dense, dense_init, swiglu, swiglu_init
+from repro.nn.module import KeyGen, fan_in_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    n_shared_experts: int = 0       # fused into one SwiGLU of n_shared * d_ff
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    shared_expert_gate: bool = False  # qwen2-moe gates the shared expert
+    # tokens are grouped and capacity applied per group, which keeps the
+    # dispatch/combine tensors linear in sequence length:
+    #   (n_groups, G, E, C) with C = O(K * G / E)  =>  bytes ~ T * K * cf.
+    # A global capacity would make them quadratic (C ~ T) and un-lowerable
+    # at the assigned 1M-token training shape.
+    group_size: int = 512
+    # ---- §Perf knobs ------------------------------------------------------
+    # pad the expert dimension to this count (0 = off) so it divides the
+    # "data" mesh axis (e.g. qwen2-moe's 60 -> 64); padded experts get
+    # -inf router logits and are never selected
+    pad_experts_to: int = 0
+    # constrain dispatch/combine so the expert dim shards over "data"
+    # (expert parallelism -> all-to-all instead of all-reduce)
+    expert_parallel: bool = False
+    # run dispatch/combine einsums in the activation dtype instead of f32
+    dispatch_bf16: bool = False
+
+    @property
+    def n_experts_padded(self) -> int:
+        return max(self.pad_experts_to, self.n_experts)
+
+
+def moe_init(key, cfg: MoEConfig, *, dtype=jnp.float32):
+    kg = KeyGen(key)
+    E, D, F = cfg.n_experts_padded, cfg.d_model, cfg.d_ff_expert
+
+    def one_expert(k):
+        return swiglu_init(k, D, F, dtype=dtype)
+
+    p = {
+        "router": dense_init(kg(), D, E, dtype=jnp.float32,
+                             init=fan_in_init()),
+        "experts": jax.vmap(one_expert)(kg.split(E)),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = swiglu_init(kg(), D, F * cfg.n_shared_experts, dtype=dtype)
+        if cfg.shared_expert_gate:
+            p["shared_gate"] = dense_init(kg(), D, 1, dtype=dtype)
+    return p
+
+
+def _capacity(cfg: MoEConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(cap, cfg.top_k)
+
+
+def _group_size(cfg: MoEConfig, n_tokens: int) -> int:
+    g = min(cfg.group_size, n_tokens)
+    while n_tokens % g:  # group size must tile the token count
+        g -= 1
+    return g
+
+
+def moe_apply(params, cfg: MoEConfig, x, *, deterministic: bool = True,
+              rng: Optional[jax.Array] = None):
+    """x: (B, S, D) -> (y, aux) where aux carries the load-balance loss.
+
+    Dispatch is capacity-based per token *group* (Shazeer-style, applied in
+    groups of ``cfg.group_size``).  All tensors stay linear in T; under
+    GSPMD the group axis shards with the batch ("data") and the expert FFN
+    width with "model", so the expert matmuls run expert- and tensor-
+    parallel with no manual collectives.
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts_padded, cfg.top_k
+    G = _group_size(cfg, T)
+    n_groups = T // G
+    C = _capacity(cfg, G)
+    xt = x.reshape(n_groups, G, D)
+    if cfg.expert_parallel:
+        # pin the group axis to "data": left to propagation, GSPMD splits
+        # the intra-group token dim G over "model" and every dispatch
+        # einsum becomes a partial-sum all-reduce of multi-GiB f32
+        # tensors (§Perf A4; conditional because the same split is
+        # profitable for top-1/E=16 under the default TP layout)
+        xt = constrain(xt, ("data", None, None))
+
+    logits = dense(params["router"], xt.astype(jnp.float32))  # (n,G,E)
+    if not deterministic and cfg.router_jitter > 0 and rng is not None:
+        logits = logits + jax.random.normal(rng, logits.shape) * cfg.router_jitter
+    if E > cfg.n_experts:   # padded experts are unroutable
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask, -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (n,G,K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- per-group capacity dispatch ---------------------------------------
+    # the one-hot routing structure is piecewise-constant: autodiff would
+    # otherwise drag multi-GiB f32 cotangents (and their model-axis
+    # all-reduces) through the cumsum/one-hot chain for an identically-
+    # zero gradient — the differentiable path is gate_vals only (§Perf)
+    ddt = x.dtype if cfg.dispatch_bf16 else jnp.float32
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=ddt)          # (n,G,K,E)
+    # position of each (token, k) within its expert queue, per group
+    pos = jnp.cumsum(onehot.reshape(n_groups, G * K, E), axis=1) \
+        .reshape(n_groups, G, K, E) - onehot
+    keep = (pos < C) & (onehot > 0)
+    pos = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)   # (n,G,K)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=ddt) \
+        * keep.max(-1, keepdims=True)
+
+    disp = jax.lax.stop_gradient(
+        onehot[..., None] * pos_oh[..., None, :])            # (n,G,K,E,C)
+    dispatch = disp.sum(2)                                    # (n,G,E,C)
+    combine = (disp * gate_vals[..., None, None].astype(ddt)).sum(2)
+    if cfg.expert_parallel:
+        dispatch = constrain(dispatch, ("data", None, None, None))
+        combine = constrain(combine, ("data", None, None, None))
+
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch,
+                           xt.astype(ddt)).astype(x.dtype)
+    if cfg.expert_parallel:
+        # expert parallelism over the "model" axis: each model shard owns
+        # E/model_size (padded) experts, so the dispatch einsum computes
+        # its expert slice locally — the only collective left is the
+        # psum of the combine output over "model"
+        expert_in = constrain(expert_in, ("data", "model", None, None))
+    # vmap over experts (stacked weights), treating (n, C) as the batch
+    expert_out = jax.vmap(swiglu, in_axes=(0, 1), out_axes=1)(
+        params["experts"], expert_in)                         # (n,E,C,D)
+    if cfg.expert_parallel:
+        expert_out = constrain(expert_out, ("data", "model", None, None))
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(ddt),
+                   expert_out.astype(ddt)).astype(x.dtype)
+
+    if "shared" in params:
+        shared = swiglu(params["shared"], xt)
+        if "shared_gate" in params:
+            g = jax.nn.sigmoid(dense(params["shared_gate"], xt))
+            shared = shared * g
+        y = y + shared
+
+    # --- auxiliary load-balance loss (Switch-style) ------------------------
+    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))        # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))                 # (E,)
+    aux_loss = cfg.n_experts * jnp.sum(frac_tokens * frac_probs)
+
+    return y.reshape(B, S, D), {"moe_aux_loss": aux_loss,
+                                "router_entropy": -jnp.mean(
+                                    jnp.sum(probs * jnp.log(probs + 1e-9), -1))}

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).  [arXiv:2402.19427]
+
+The recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) is a
+diagonal linear recurrence; training/prefill uses jax.lax.associative_scan,
+decode is a single fused step.  The surrounding block follows Griffin's
+recurrent block: in-proj -> causal conv1d(4) -> RG-LRU, gated by a GeLU
+branch, then out-proj.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import dense, dense_init
+from repro.nn.module import KeyGen
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int = 0              # recurrence width; 0 => d_model
+    conv_width: int = 4
+    n_blocks: int = 1           # block-diagonal gate projections (Griffin uses heads)
+
+    @property
+    def width(self) -> int:
+        return self.d_rnn or self.d_model
+
+
+def rglru_init(key, cfg: RGLRUConfig, *, dtype=jnp.float32):
+    kg = KeyGen(key)
+    W = cfg.width
+    # Λ initialised so a^c = exp(-c·softplus(Λ)) spans (0.9, 0.999)
+    u = jax.random.uniform(kg(), (W,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^{-1}(-log(u)/c)
+    return {
+        "in_x": dense_init(kg(), cfg.d_model, W, dtype=dtype),
+        "in_gate": dense_init(kg(), cfg.d_model, W, dtype=dtype),
+        "conv": {"kernel": (jax.random.normal(kg(), (cfg.conv_width, W)) * 0.1
+                            ).astype(dtype),
+                 "bias": jnp.zeros((W,), dtype)},
+        "w_a": dense_init(kg(), W, W, use_bias=True, dtype=dtype),
+        "w_i": dense_init(kg(), W, W, use_bias=True, dtype=dtype),
+        "lambda": lam.astype(jnp.float32),
+        "out": dense_init(kg(), W, cfg.d_model, dtype=dtype),
+    }
+
+
+def _gates(params, x):
+    """x: (..., W) post-conv activations.  Returns (a, gated_input)."""
+    r = jax.nn.sigmoid(dense(params["w_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(params["w_i"], x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * x.astype(jnp.float32))
+
+
+def _causal_conv(x, kernel, bias):
+    W = kernel.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * kernel[i] for i in range(W))
+    return out + bias
+
+
+def rglru_scan(a, bx, h0=None):
+    """Diagonal linear recurrence via associative scan along axis 1.
+
+    a, bx: (B, S, W).  h_t = a_t h_{t-1} + bx_t.
+    """
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_forward(params, cfg: RGLRUConfig, u, *, h0=None,
+                  return_state: bool = False):
+    """Griffin recurrent block, full sequence.  u: (B, S, d_model)."""
+    gate = jax.nn.gelu(dense(params["in_gate"], u))
+    x = dense(params["in_x"], u)
+    x = _causal_conv(x, params["conv"]["kernel"], params["conv"]["bias"])
+    a, bx = _gates(params, x)
+    h = rglru_scan(a, bx, h0=h0)
+    y = (h.astype(u.dtype)) * gate
+    out = dense(params["out"], y)
+    if return_state:
+        return out, h[:, -1].astype(jnp.float32)
+    return out
+
+
+def rglru_init_state(cfg: RGLRUConfig, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.width), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.width), dtype),
+    }
+
+
+def rglru_decode_step(params, cfg: RGLRUConfig, u, state):
+    """One-token decode.  u: (B, 1, d_model)."""
+    u0 = u[:, 0]
+    gate = jax.nn.gelu(dense(params["in_gate"], u0))
+    x = dense(params["in_x"], u0)
+    conv_buf = jnp.concatenate([state["conv"], x[:, None, :]], axis=1)
+    kernel, bias = params["conv"]["kernel"], params["conv"]["bias"]
+    x = jnp.einsum("bwc,wc->bc", conv_buf, kernel) + bias
+    a, bx = _gates(params, x)
+    h = a * state["h"] + bx
+    y = h.astype(u.dtype) * gate
+    out = dense(params["out"], y)[:, None, :]
+    return out, {"h": h.astype(state["h"].dtype), "conv": conv_buf[:, 1:]}

@@ -1,0 +1,207 @@
+"""Mamba-2 (SSD — state-space duality) layer.  [arXiv:2405.21060]
+
+Training/prefill uses the chunked SSD algorithm (within-chunk quadratic +
+inter-chunk linear recurrence via lax.scan over chunk states); decode is the
+O(1) recurrent update.  Pure JAX — the per-chunk matmuls are MXU-shaped by
+construction (chunk length 256, head dim 64, state 128).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import dense, dense_init, rmsnorm, rmsnorm_init
+from repro.nn.module import KeyGen
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64          # P
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_init(key, cfg: SSMConfig, *, dtype=jnp.float32):
+    kg = KeyGen(key)
+    d_in = cfg.d_inner
+    G, N, H = cfg.n_groups, cfg.d_state, cfg.n_heads
+    proj_out = 2 * d_in + 2 * G * N + H  # [z, x, B, C, dt]
+    conv_dim = d_in + 2 * G * N
+    return {
+        "in_proj": dense_init(kg(), cfg.d_model, proj_out, dtype=dtype),
+        "conv": {"kernel": (jax.random.normal(kg(), (cfg.conv_width, conv_dim))
+                            * 0.1).astype(dtype),
+                 "bias": jnp.zeros((conv_dim,), dtype)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(kg(), d_in, cfg.d_model, dtype=dtype),
+    }
+
+
+def _split_proj(cfg: SSMConfig, zxbcdt):
+    d_in, G, N, H = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * G * N]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, kernel, bias):
+    """Depthwise causal conv along sequence.  xBC: (B,S,Cc); kernel: (W,Cc)."""
+    W = kernel.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * kernel[i] for i in range(W))
+    return jax.nn.silu(out + bias)
+
+
+def _segsum(x):
+    """x: (..., L).  Returns seg[..., i, j] = sum_{k=j+1..i} x_k (lower-tri,
+    -inf above the diagonal)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(cfg: SSMConfig, x, dt, A, B, C, D, *, h0=None):
+    """Chunked SSD scan.
+
+    x: (b, S, H, P); dt: (b, S, H) (post softplus); A: (H,) negative;
+    B, C: (b, S, G, N); D: (H,).  Returns (y, h_final) with
+    h_final: (b, H, P, N).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[-2], B.shape[-1]
+    Q = min(cfg.chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    c = S // Q
+    rep = H // G
+
+    xc = x.reshape(b, c, Q, H, P)
+    dtc = dt.reshape(b, c, Q, H)
+    Bc = B.reshape(b, c, Q, G, N)
+    Cc = C.reshape(b, c, Q, G, N)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,c,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                    # (b,c,Q,H)
+    dA_cs = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+
+    # 1. within-chunk (quadratic) term
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))      # (b,c,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)
+    y_diag = jnp.einsum("bchqk,bchqk,bckh,bckhp->bcqhp",
+                        scores, Lmat, dtc, xc)
+
+    # 2. per-chunk input states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b,c,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn",
+                        Bh, decay_states, dtc, xc)       # (b,c,H,P,N)
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # (b,c,H)
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), states.dtype)
+
+    def step(h, inp):
+        dec, s = inp                                      # dec: (b,H), s: (b,H,P,N)
+        h = h * dec[:, :, None, None] + s
+        return h, h
+
+    decs = jnp.moveaxis(chunk_decay, 1, 0)               # (c,b,H)
+    ss = jnp.moveaxis(states, 1, 0)                      # (c,b,H,P,N)
+    h_final, h_all = jax.lax.scan(step, h0, (decs, ss))
+    # states *entering* each chunk
+    h_in = jnp.concatenate([h0[None], h_all[:-1]], axis=0)
+    h_in = jnp.moveaxis(h_in, 0, 1)                      # (b,c,H,P,N)
+
+    # 4. chunk-output from incoming states
+    out_decay = jnp.exp(dA_cs)                           # (b,c,Q,H)
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Ch, out_decay, h_in)
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    y = y + x * D[None, None, :, None]
+    return y, h_final
+
+
+def ssm_forward(params, cfg: SSMConfig, u, *, h0=None, conv0=None,
+                return_state: bool = False):
+    """Full-sequence forward.  u: (B, S, d_model)."""
+    B_, S, _ = u.shape
+    G, N, H, P = cfg.n_groups, cfg.d_state, cfg.n_heads, cfg.head_dim
+    zxbcdt = dense(params["in_proj"], u)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, params["conv"]["kernel"], params["conv"]["bias"])
+    x = xBC[..., :cfg.d_inner].reshape(B_, S, H, P)
+    Bm = xBC[..., cfg.d_inner:cfg.d_inner + G * N].reshape(B_, S, G, N)
+    Cm = xBC[..., cfg.d_inner + G * N:].reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, h = ssd_chunked(cfg, x.astype(jnp.float32), dt, A,
+                       Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                       params["D"], h0=h0)
+    y = y.reshape(B_, S, cfg.d_inner).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = dense(params["out_proj"], y)
+    if return_state:
+        return out, h
+    return out
+
+
+def ssm_init_state(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.n_groups * cfg.d_state), dtype),
+    }
+
+
+def ssm_decode_step(params, cfg: SSMConfig, u, state):
+    """One-token decode.  u: (B, 1, d_model).  Returns (out, new_state)."""
+    B_, _, _ = u.shape
+    G, N, H, P = cfg.n_groups, cfg.d_state, cfg.n_heads, cfg.head_dim
+    zxbcdt = dense(params["in_proj"], u[:, 0])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+
+    # rolling conv state
+    conv_buf = jnp.concatenate([state["conv"], xBC[:, None, :]], axis=1)
+    kernel, bias = params["conv"]["kernel"], params["conv"]["bias"]
+    xBC = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_buf, kernel) + bias)
+    new_conv = conv_buf[:, 1:]
+
+    x = xBC[..., :cfg.d_inner].reshape(B_, H, P)
+    Bm = xBC[..., cfg.d_inner:cfg.d_inner + G * N].reshape(B_, G, N)
+    Cm = xBC[..., cfg.d_inner + G * N:].reshape(B_, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                     # (B,H)
+
+    h = state["h"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, x.astype(jnp.float32), Bh.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(B_, cfg.d_inner).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = dense(params["out_proj"], y)[:, None, :]
+    return out, {"h": h.astype(state["h"].dtype), "conv": new_conv}

@@ -1,0 +1,5 @@
+"""RL substrate: PPO / SAC / DDPG with swappable observation encoders."""
+
+from repro.rl.train import TASK_ALGO, TrainResult, train
+
+__all__ = ["train", "TrainResult", "TASK_ALGO"]

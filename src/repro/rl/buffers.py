@@ -1,0 +1,49 @@
+"""Replay buffer (SAC/DDPG) with uint8 pixel storage (host-side numpy)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, obs_shape: tuple, action_dim: int,
+                 seed: int = 0):
+        self.capacity = capacity
+        self.obs = np.zeros((capacity,) + obs_shape, np.uint8)
+        self.next_obs = np.zeros((capacity,) + obs_shape, np.uint8)
+        self.actions = np.zeros((capacity, action_dim), np.float32)
+        self.rewards = np.zeros((capacity,), np.float32)
+        self.dones = np.zeros((capacity,), np.float32)
+        self.idx = 0
+        self.full = False
+        self.rng = np.random.default_rng(seed)
+
+    def __len__(self):
+        return self.capacity if self.full else self.idx
+
+    @staticmethod
+    def _quantize(obs):
+        return np.clip(np.round(np.asarray(obs) * 255), 0, 255).astype(np.uint8)
+
+    def add_batch(self, obs, action, reward, next_obs, done):
+        """Vectorised add: leading dim = n_envs."""
+        n = obs.shape[0]
+        idxs = (self.idx + np.arange(n)) % self.capacity
+        self.obs[idxs] = self._quantize(obs)
+        self.next_obs[idxs] = self._quantize(next_obs)
+        self.actions[idxs] = np.asarray(action)
+        self.rewards[idxs] = np.asarray(reward)
+        self.dones[idxs] = np.asarray(done, np.float32)
+        self.idx = int((self.idx + n) % self.capacity)
+        self.full = self.full or self.idx < n or len(self) == self.capacity
+        if not self.full and self.idx == 0:
+            self.full = True
+
+    def sample(self, batch: int):
+        idxs = self.rng.integers(0, len(self), size=batch)
+        return {
+            "obs": self.obs[idxs].astype(np.float32) / 255.0,
+            "next_obs": self.next_obs[idxs].astype(np.float32) / 255.0,
+            "actions": self.actions[idxs],
+            "rewards": self.rewards[idxs],
+            "dones": self.dones[idxs],
+        }

@@ -1,0 +1,78 @@
+"""DDPG (Lillicrap et al., 2015) — the paper's Pendulum algorithm.
+
+Deterministic actor with Gaussian exploration noise, single Q critic,
+Polyak target updates — SB3 defaults.  Encoder trained by the critic loss
+(actor gradients stop at the features), as in repro.rl.sac.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import KeyGen
+from repro.rl.networks import (Encoder, FEATURE_DIM, det_actor,
+                               det_actor_init, q_critic, q_critic_init)
+from repro.train.optimizer import adam, ema_update
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    gamma: float = 0.99
+    tau: float = 0.005
+    lr: float = 1e-3
+    batch_size: int = 64
+    buffer_size: int = 20_000
+    learning_starts: int = 300
+    action_noise: float = 0.1
+
+
+def init_ddpg(key, encoder: Encoder, action_dim: int):
+    kg = KeyGen(key)
+    params = {
+        "encoder": encoder.init(kg()),
+        "actor": det_actor_init(kg(), FEATURE_DIM, action_dim),
+        "q": q_critic_init(kg(), FEATURE_DIM, action_dim),
+    }
+    target = jax.tree.map(jnp.copy, params)
+    return params, target
+
+
+def make_ddpg_update(encoder: Encoder, action_dim: int, cfg: DDPGConfig):
+    opt = adam(cfg.lr, clip_norm=10.0)
+
+    def critic_loss(params, target, batch):
+        feats = encoder.apply(params["encoder"], batch["obs"])
+        tfeats = encoder.apply(target["encoder"], batch["next_obs"])
+        next_a = det_actor(target["actor"], tfeats)
+        tq = q_critic(target["q"], tfeats, next_a)
+        y = jax.lax.stop_gradient(
+            batch["rewards"] + cfg.gamma * (1 - batch["dones"]) * tq)
+        q = q_critic(params["q"], feats, batch["actions"])
+        return jnp.square(q - y).mean()
+
+    def actor_loss(params, batch):
+        feats = jax.lax.stop_gradient(
+            encoder.apply(params["encoder"], batch["obs"]))
+        a = det_actor(params["actor"], feats)
+        return -q_critic(params["q"], feats, a).mean()
+
+    @jax.jit
+    def update(params, target, opt_state, batch):
+        closs, cgrads = jax.value_and_grad(critic_loss)(params, target, batch)
+        aloss, agrads = jax.value_and_grad(actor_loss)(params, batch)
+        grads = jax.tree.map(lambda a, b: a + b, cgrads, agrads)
+        params, opt_state = opt.update(params, opt_state, grads)
+        new_target = ema_update(target, params, cfg.tau)
+        return params, new_target, opt_state, {
+            "critic_loss": closs, "actor_loss": aloss}
+
+    @jax.jit
+    def act(params, obs, key):
+        feats = encoder.apply(params["encoder"], obs)
+        a = det_actor(params["actor"], feats)
+        noise = cfg.action_noise * jax.random.normal(key, a.shape)
+        return jnp.clip(a + noise, -1, 1), a
+
+    return update, act, opt

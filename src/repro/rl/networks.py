@@ -1,0 +1,193 @@
+"""Policy/value networks for the learning experiments (§4.1).
+
+Encoders:
+* ``full_cnn``   — the SB3 NatureCNN default CnnPolicy feature extractor
+                   (the paper's Full-CNN baseline): conv 8x8/4x32,
+                   4x4/2x64, 3x3/1x64, flatten, dense 512 + ReLU.
+* ``miniconv``   — the paper's on-device encoder (K in {4, 16}); the conv
+                   stack is the *edge* half, the flatten+dense(512) belongs
+                   to the *server* half, so the wire tensor is exactly the
+                   K-channel feature map the paper transmits.
+
+Heads (downstream policy/value networks are identical across encoders, as
+in the paper): Gaussian actor (PPO), squashed-Gaussian actor + twin Q
+critics (SAC), deterministic actor + Q critic (DDPG).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.miniconv import (MiniConvSpec, miniconv_apply,
+                                 miniconv_feature_shape, miniconv_init,
+                                 standard_spec)
+from repro.nn.layers import conv2d, conv2d_init, dense, dense_init
+from repro.nn.module import KeyGen, orthogonal_init
+
+FEATURE_DIM = 512
+
+
+# ---------------------------------------------------------------------------
+# Encoders
+# ---------------------------------------------------------------------------
+
+def full_cnn_init(key, c_in: int, *, h: int = 84, w: int = 84):
+    kg = KeyGen(key)
+    # NatureCNN spatial sizes for 84x84 (VALID padding as in SB3/torch)
+    h1, w1 = (h - 8) // 4 + 1, (w - 8) // 4 + 1       # 20
+    h2, w2 = (h1 - 4) // 2 + 1, (w1 - 4) // 2 + 1     # 9
+    h3, w3 = h2 - 3 + 1, w2 - 3 + 1                   # 7
+    flat = h3 * w3 * 64
+    return {
+        "conv1": conv2d_init(kg(), 8, 8, c_in, 32),
+        "conv2": conv2d_init(kg(), 4, 4, 32, 64),
+        "conv3": conv2d_init(kg(), 3, 3, 64, 64),
+        "proj": dense_init(kg(), flat, FEATURE_DIM, use_bias=True),
+    }
+
+
+def full_cnn_apply(params, obs):
+    """obs: (B, 84, 84, C) in [0,1] -> (B, 512)."""
+    x = jax.nn.relu(conv2d(params["conv1"], obs, stride=4, padding="VALID"))
+    x = jax.nn.relu(conv2d(params["conv2"], x, stride=2, padding="VALID"))
+    x = jax.nn.relu(conv2d(params["conv3"], x, stride=1, padding="VALID"))
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(dense(params["proj"], x))
+
+
+def miniconv_encoder_init(key, spec: MiniConvSpec, *, h: int = 84,
+                          w: int = 84):
+    """Edge (conv passes) + server (projection) halves, kept separate so
+    the deployment split is a dict split."""
+    kg = KeyGen(key)
+    fh, fw, k = miniconv_feature_shape(spec, h, w)
+    return {
+        "edge": miniconv_init(kg(), spec),
+        "server": {"proj": dense_init(kg(), fh * fw * k, FEATURE_DIM,
+                                      use_bias=True)},
+    }
+
+
+def miniconv_edge_apply(params, spec: MiniConvSpec, obs, *,
+                        use_kernel: bool = False):
+    return miniconv_apply(params, spec, obs, use_kernel=use_kernel)
+
+
+def miniconv_server_apply(params, feats):
+    x = feats.reshape(feats.shape[0], -1)
+    return jax.nn.relu(dense(params["proj"], x))
+
+
+@dataclasses.dataclass(frozen=True)
+class Encoder:
+    """Uniform encoder interface for the RL algorithms."""
+
+    name: str
+    init: Any
+    apply: Any                      # (params, obs) -> (B, 512)
+    spec: MiniConvSpec | None = None
+
+
+def make_encoder(name: str, c_in: int = 9) -> Encoder:
+    """name in {"full_cnn", "miniconv4", "miniconv16"}."""
+    if name == "full_cnn":
+        return Encoder("full_cnn",
+                       lambda key: full_cnn_init(key, c_in),
+                       full_cnn_apply)
+    if name.startswith("miniconv"):
+        k = int(name.replace("miniconv", ""))
+        spec = standard_spec(c_in=c_in, k=k)
+
+        def apply(params, obs):
+            feats = miniconv_edge_apply(params["edge"], spec, obs)
+            return miniconv_server_apply(params["server"], feats)
+
+        return Encoder(name,
+                       lambda key: miniconv_encoder_init(key, spec),
+                       apply, spec=spec)
+    raise ValueError(f"unknown encoder {name}")
+
+
+# ---------------------------------------------------------------------------
+# Heads
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, sizes: list[int], *, use_bias=True, final_scale=0.01):
+    kg = KeyGen(key)
+    params = {}
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        scale = final_scale if i == len(sizes) - 2 else math.sqrt(2.0)
+        params[f"fc{i}"] = dense_init(kg(), a, b, use_bias=use_bias,
+                                      init=orthogonal_init(scale))
+    return params
+
+
+def mlp_apply(params, x, *, final_act=None):
+    n = len(params)
+    for i in range(n):
+        x = dense(params[f"fc{i}"], x)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return final_act(x) if final_act is not None else x
+
+
+def gaussian_actor_init(key, feat_dim: int, action_dim: int):
+    kg = KeyGen(key)
+    return {"mlp": mlp_init(kg(), [feat_dim, 256, action_dim]),
+            "log_std": jnp.zeros((action_dim,))}
+
+
+def gaussian_actor(params, feats):
+    mean = mlp_apply(params["mlp"], feats)
+    log_std = jnp.clip(params["log_std"], -5.0, 2.0)
+    return mean, jnp.broadcast_to(log_std, mean.shape)
+
+
+def squashed_actor_init(key, feat_dim: int, action_dim: int):
+    return {"mlp": mlp_init(key, [feat_dim, 256, 2 * action_dim],
+                            final_scale=0.01)}
+
+
+def squashed_actor_sample(params, feats, key):
+    out = mlp_apply(params["mlp"], feats)
+    mean, log_std = jnp.split(out, 2, axis=-1)
+    log_std = jnp.clip(log_std, -10.0, 2.0)
+    std = jnp.exp(log_std)
+    eps = jax.random.normal(key, mean.shape)
+    pre = mean + std * eps
+    action = jnp.tanh(pre)
+    # log prob with tanh correction
+    logp = (-0.5 * (eps ** 2 + 2 * log_std + math.log(2 * math.pi))).sum(-1)
+    logp -= jnp.sum(2 * (math.log(2.0) - pre - jax.nn.softplus(-2 * pre)), -1)
+    return action, logp, jnp.tanh(mean)
+
+
+def q_critic_init(key, feat_dim: int, action_dim: int):
+    return {"mlp": mlp_init(key, [feat_dim + action_dim, 256, 1],
+                            final_scale=1.0)}
+
+
+def q_critic(params, feats, action):
+    return mlp_apply(params["mlp"],
+                     jnp.concatenate([feats, action], -1))[..., 0]
+
+
+def v_critic_init(key, feat_dim: int):
+    return {"mlp": mlp_init(key, [feat_dim, 256, 1], final_scale=1.0)}
+
+
+def v_critic(params, feats):
+    return mlp_apply(params["mlp"], feats)[..., 0]
+
+
+def det_actor_init(key, feat_dim: int, action_dim: int):
+    return {"mlp": mlp_init(key, [feat_dim, 256, action_dim],
+                            final_scale=0.01)}
+
+
+def det_actor(params, feats):
+    return jnp.tanh(mlp_apply(params["mlp"], feats))

@@ -1,0 +1,167 @@
+"""PPO (Schulman et al., 2017) — the paper's Walker2d algorithm.
+
+Fully-jitted vectorised rollout (scan over steps, vmap over envs) + clipped
+surrogate updates with GAE.  Hyperparameters follow SB3 defaults unless
+overridden (the paper: "Unless otherwise stated, these settings follow the
+Stable-Baselines3 defaults").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.wrappers import PixelEnv
+from repro.rl.networks import (Encoder, gaussian_actor, gaussian_actor_init,
+                               v_critic, v_critic_init, FEATURE_DIM)
+from repro.nn.module import KeyGen
+from repro.train.optimizer import adam
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    n_envs: int = 8
+    n_steps: int = 128           # rollout horizon per env
+    n_epochs: int = 4
+    n_minibatches: int = 8
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    clip_eps: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.0
+    lr: float = 3e-4
+    max_grad_norm: float = 0.5
+    quantize_wire: bool = False  # straight-through uint8 wire in training
+
+
+def init_ppo(key, encoder: Encoder, action_dim: int):
+    kg = KeyGen(key)
+    return {
+        "encoder": encoder.init(kg()),
+        "actor": gaussian_actor_init(kg(), FEATURE_DIM, action_dim),
+        "critic": v_critic_init(kg(), FEATURE_DIM),
+    }
+
+
+def _policy(params, encoder: Encoder, obs):
+    feats = encoder.apply(params["encoder"], obs)
+    mean, log_std = gaussian_actor(params["actor"], feats)
+    value = v_critic(params["critic"], feats)
+    return mean, log_std, value
+
+
+def _logp(mean, log_std, action):
+    var = jnp.exp(2 * log_std)
+    return (-0.5 * ((action - mean) ** 2 / var + 2 * log_std
+                    + jnp.log(2 * jnp.pi))).sum(-1)
+
+
+def make_ppo_step(env: PixelEnv, encoder: Encoder, cfg: PPOConfig):
+    """Returns jitted (train_iteration, init_carry)."""
+    opt = adam(cfg.lr, clip_norm=cfg.max_grad_norm)
+
+    def rollout(params, env_states, obs, key):
+        def step(carry, k):
+            env_states, obs = carry
+            mean, log_std, value = _policy(params, encoder, obs)
+            action = mean + jnp.exp(log_std) * jax.random.normal(
+                k, mean.shape)
+            logp = _logp(mean, log_std, action)
+            act_clip = jnp.clip(action, -1.0, 1.0)
+            env_states, next_obs, reward, done = jax.vmap(env.step)(
+                env_states, act_clip)
+            out = dict(obs=obs, action=action, logp=logp, value=value,
+                       reward=reward, done=done)
+            return (env_states, next_obs), out
+
+        keys = jax.random.split(key, cfg.n_steps)
+        (env_states, obs), traj = jax.lax.scan(step, (env_states, obs), keys)
+        _, _, last_value = _policy(params, encoder, obs)
+        return env_states, obs, traj, last_value
+
+    def gae(traj, last_value):
+        def back(carry, t):
+            adv_next, v_next = carry
+            nonterm = 1.0 - t["done"].astype(jnp.float32)
+            delta = t["reward"] + cfg.gamma * v_next * nonterm - t["value"]
+            adv = delta + cfg.gamma * cfg.gae_lambda * nonterm * adv_next
+            return (adv, t["value"]), adv
+
+        (_, _), advs = jax.lax.scan(
+            back, (jnp.zeros_like(last_value), last_value), traj,
+            reverse=True)
+        returns = advs + traj["value"]
+        return advs, returns
+
+    def loss_fn(params, batch):
+        mean, log_std, value = _policy(params, encoder, batch["obs"])
+        logp = _logp(mean, log_std, batch["action"])
+        ratio = jnp.exp(logp - batch["logp"])
+        adv = batch["adv"]
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        pg1 = ratio * adv
+        pg2 = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv
+        pg_loss = -jnp.minimum(pg1, pg2).mean()
+        v_loss = 0.5 * jnp.square(value - batch["ret"]).mean()
+        entropy = (log_std + 0.5 * jnp.log(2 * jnp.pi * jnp.e)).sum(-1).mean()
+        loss = pg_loss + cfg.vf_coef * v_loss - cfg.ent_coef * entropy
+        return loss, {"pg_loss": pg_loss, "v_loss": v_loss,
+                      "entropy": entropy,
+                      "approx_kl": ((ratio - 1) - jnp.log(ratio)).mean()}
+
+    def update(params, opt_state, traj, advs, returns, key):
+        T, N = cfg.n_steps, cfg.n_envs
+        flat = {
+            "obs": traj["obs"].reshape(T * N, *traj["obs"].shape[2:]),
+            "action": traj["action"].reshape(T * N, -1),
+            "logp": traj["logp"].reshape(T * N),
+            "adv": advs.reshape(T * N),
+            "ret": returns.reshape(T * N),
+        }
+        mb = T * N // cfg.n_minibatches
+
+        def epoch(carry, k):
+            params, opt_state = carry
+            perm = jax.random.permutation(k, T * N)
+
+            def minibatch(carry, idx):
+                params, opt_state = carry
+                batch = jax.tree.map(lambda x: x[idx], flat)
+                (loss, aux), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+                params, opt_state = opt.update(params, opt_state, grads)
+                return (params, opt_state), aux
+
+            idxs = perm.reshape(cfg.n_minibatches, mb)
+            (params, opt_state), auxs = jax.lax.scan(
+                minibatch, (params, opt_state), idxs)
+            return (params, opt_state), auxs
+
+        keys = jax.random.split(key, cfg.n_epochs)
+        (params, opt_state), auxs = jax.lax.scan(
+            epoch, (params, opt_state), keys)
+        return params, opt_state, jax.tree.map(lambda x: x.mean(), auxs)
+
+    @jax.jit
+    def train_iteration(params, opt_state, env_states, obs, key):
+        k_roll, k_upd = jax.random.split(key)
+        env_states, obs, traj, last_value = rollout(
+            params, env_states, obs, k_roll)
+        advs, returns = gae(traj, last_value)
+        params, opt_state, aux = update(params, opt_state, traj, advs,
+                                        returns, k_upd)
+        metrics = dict(aux)
+        metrics["mean_reward"] = traj["reward"].mean()
+        return params, opt_state, env_states, obs, metrics, traj
+
+    def init_carry(key):
+        kg = KeyGen(key)
+        params = init_ppo(kg(), encoder, env.action_dim)
+        opt_state = opt.init(params)
+        env_states, obs = jax.vmap(env.reset)(kg.split(cfg.n_envs))
+        return params, opt_state, env_states, obs
+
+    return train_iteration, init_carry

@@ -1,0 +1,103 @@
+"""SAC (Haarnoja et al., 2018) — the paper's Hopper algorithm.
+
+Twin Q critics, squashed-Gaussian actor, automatic entropy tuning (target
+entropy = -|A|), Polyak target updates.  Pixel convention (DrQ-style, which
+matches SB3's shared feature extractor): the encoder is trained by the
+critic loss; actor gradients stop at the features.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import KeyGen
+from repro.rl.networks import (Encoder, FEATURE_DIM, q_critic, q_critic_init,
+                               squashed_actor_init, squashed_actor_sample)
+from repro.train.optimizer import adam, ema_update
+
+
+@dataclasses.dataclass(frozen=True)
+class SACConfig:
+    gamma: float = 0.99
+    tau: float = 0.005
+    lr: float = 3e-4
+    batch_size: int = 64
+    buffer_size: int = 20_000
+    learning_starts: int = 500
+    train_freq: int = 1           # gradient steps per env step
+    init_alpha: float = 0.1
+
+
+def init_sac(key, encoder: Encoder, action_dim: int):
+    kg = KeyGen(key)
+    params = {
+        "encoder": encoder.init(kg()),
+        "actor": squashed_actor_init(kg(), FEATURE_DIM, action_dim),
+        "q1": q_critic_init(kg(), FEATURE_DIM, action_dim),
+        "q2": q_critic_init(kg(), FEATURE_DIM, action_dim),
+        "log_alpha": jnp.log(jnp.asarray(SACConfig.init_alpha)),
+    }
+    target = {"encoder": params["encoder"], "q1": params["q1"],
+              "q2": params["q2"]}
+    return params, jax.tree.map(jnp.copy, target)
+
+
+def make_sac_update(encoder: Encoder, action_dim: int, cfg: SACConfig):
+    opt = adam(cfg.lr, clip_norm=10.0)
+    target_entropy = -float(action_dim)
+
+    def critic_loss(params, target, batch, key):
+        feats = encoder.apply(params["encoder"], batch["obs"])
+        tfeats = encoder.apply(target["encoder"], batch["next_obs"])
+        next_a, next_logp, _ = squashed_actor_sample(
+            params["actor"], jax.lax.stop_gradient(tfeats), key)
+        tq1 = q_critic(target["q1"], tfeats, next_a)
+        tq2 = q_critic(target["q2"], tfeats, next_a)
+        alpha = jnp.exp(params["log_alpha"])
+        tq = jnp.minimum(tq1, tq2) - alpha * next_logp
+        y = batch["rewards"] + cfg.gamma * (1 - batch["dones"]) * tq
+        y = jax.lax.stop_gradient(y)
+        q1 = q_critic(params["q1"], feats, batch["actions"])
+        q2 = q_critic(params["q2"], feats, batch["actions"])
+        return jnp.square(q1 - y).mean() + jnp.square(q2 - y).mean()
+
+    def actor_alpha_loss(params, batch, key):
+        feats = jax.lax.stop_gradient(
+            encoder.apply(params["encoder"], batch["obs"]))
+        a, logp, _ = squashed_actor_sample(params["actor"], feats, key)
+        alpha = jnp.exp(params["log_alpha"])
+        q = jnp.minimum(q_critic(params["q1"], feats, a),
+                        q_critic(params["q2"], feats, a))
+        actor_loss = (jax.lax.stop_gradient(alpha) * logp - q).mean()
+        alpha_loss = -(params["log_alpha"]
+                       * jax.lax.stop_gradient(logp + target_entropy)).mean()
+        return actor_loss + alpha_loss, (actor_loss, alpha_loss)
+
+    @jax.jit
+    def update(params, target, opt_state, batch, key):
+        k1, k2 = jax.random.split(key)
+        closs, cgrads = jax.value_and_grad(critic_loss)(
+            params, target, batch, k1)
+        # critic grads touch encoder + q1 + q2 (+ log_alpha has zero grad)
+        (aloss_tot, (aloss, alphloss)), agrads = jax.value_and_grad(
+            actor_alpha_loss, has_aux=True)(params, batch, k2)
+        grads = jax.tree.map(lambda a, b: a + b, cgrads, agrads)
+        params, opt_state = opt.update(params, opt_state, grads)
+        new_target = ema_update(
+            target,
+            {"encoder": params["encoder"], "q1": params["q1"],
+             "q2": params["q2"]},
+            cfg.tau)
+        return params, new_target, opt_state, {
+            "critic_loss": closs, "actor_loss": aloss,
+            "alpha": jnp.exp(params["log_alpha"])}
+
+    @jax.jit
+    def act(params, obs, key):
+        feats = encoder.apply(params["encoder"], obs)
+        a, _, det = squashed_actor_sample(params["actor"], feats, key)
+        return a, det
+
+    return update, act, opt

@@ -1,0 +1,6 @@
+from repro.serving.netsim import ShapedLink, LinkTrace
+from repro.serving.server import PolicyServer, QueueSim
+from repro.serving.client import EdgeClient, DecisionLoop
+
+__all__ = ["ShapedLink", "LinkTrace", "PolicyServer", "QueueSim",
+           "EdgeClient", "DecisionLoop"]

@@ -1,0 +1,75 @@
+"""Edge-client execution and the end-to-end decision loop.
+
+``EdgeClient`` wraps the on-device half (a MiniConv encoder or the edge
+stage of a split transformer) + wire codec.  ``DecisionLoop`` composes
+client, link, and server into the paper's Figure-5 pipeline and measures
+decision latency (observation available -> action received), either with
+measured host wall-clock for the compute stages or with supplied stage
+times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.serving.netsim import ShapedLink
+from repro.serving.server import PolicyServer, _block
+
+
+@dataclasses.dataclass
+class EdgeClient:
+    """encode_fn(obs) -> payload dict; wire_bytes = bytes on the link."""
+
+    encode_fn: Callable
+    wire_bytes: int
+    encode_time_s: Optional[float] = None
+
+    def measure(self, example_obs, *, iters: int = 20) -> float:
+        self.encode_fn(example_obs)  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = self.encode_fn(example_obs)
+        _block(out)
+        self.encode_time_s = (time.perf_counter() - t0) / iters
+        return self.encode_time_s
+
+
+@dataclasses.dataclass
+class DecisionLoop:
+    """One client against one server over a shaped link.
+
+    ``split=True``  : obs -> edge encode -> tx(features) -> server head
+    ``split=False`` : obs -> tx(raw frame) -> server (encoder + head)
+    """
+
+    link: ShapedLink
+    server_time_s: float
+    split: bool
+    edge_time_s: float = 0.0
+    payload_bytes: int = 0
+    action_bytes: int = 64
+
+    def decision_latency(self) -> float:
+        t = 0.0
+        if self.split:
+            t += self.edge_time_s
+        tr = self.link.send(t, self.payload_bytes)
+        t = tr.arrival + self.server_time_s
+        t += self.link.tx_time(self.action_bytes) + self.link.propagation_s
+        return t
+
+    def run(self, n_decisions: int = 1000) -> np.ndarray:
+        """Sequential closed-loop decisions (the RL setting: the next
+        observation exists only after the action returns)."""
+        self.link.reset()
+        lats = []
+        for _ in range(n_decisions):
+            lats.append(self.decision_latency())
+            self.link.reset()   # closed loop: link idle between decisions
+        return np.asarray(lats)
+
+    def median_latency(self, n_decisions: int = 1000) -> float:
+        return float(np.median(self.run(n_decisions)))

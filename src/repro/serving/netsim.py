@@ -1,0 +1,54 @@
+"""Deterministic bandwidth-shaped link simulation.
+
+Replaces the paper's ``tc netem``-shaped physical link: a serialising link
+with finite bandwidth, fixed propagation delay, and (optional)
+deterministic jitter.  Transfers are serialised FIFO — a transfer cannot
+start before the previous one finished (token-bucket with depth one burst),
+which is what bandwidth shaping does to a single TCP flow.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class LinkTrace:
+    start: float
+    tx_done: float
+    arrival: float
+    payload_bytes: int
+
+
+@dataclasses.dataclass
+class ShapedLink:
+    bandwidth_bps: float             # shaped bandwidth, bits/s
+    propagation_s: float = 0.002     # one-way propagation delay
+    jitter_s: float = 0.0            # deterministic per-transfer jitter
+    _busy_until: float = 0.0
+    _n: int = 0
+
+    def tx_time(self, payload_bytes: int) -> float:
+        return 8.0 * payload_bytes / self.bandwidth_bps
+
+    def send(self, t: float, payload_bytes: int) -> LinkTrace:
+        """Enqueue a transfer at time ``t``; returns timing trace."""
+        start = max(t, self._busy_until)
+        jitter = self.jitter_s * (self._n % 3) / 2.0
+        tx_done = start + self.tx_time(payload_bytes) + jitter
+        self._busy_until = tx_done
+        self._n += 1
+        return LinkTrace(start=start, tx_done=tx_done,
+                         arrival=tx_done + self.propagation_s,
+                         payload_bytes=payload_bytes)
+
+    def reset(self) -> None:
+        self._busy_until = 0.0
+        self._n = 0
+
+
+MBPS = 1e6
+
+
+def shaped(mbps: float, *, rtt_ms: float = 4.0) -> ShapedLink:
+    return ShapedLink(bandwidth_bps=mbps * MBPS,
+                      propagation_s=rtt_ms / 2000.0)

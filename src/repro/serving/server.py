@@ -1,0 +1,95 @@
+"""Server-side policy execution + multi-client queueing simulation.
+
+``PolicyServer`` wraps a jitted server-half function and measures its
+service time on this host.  ``QueueSim`` reproduces the paper's Table 6
+setting: N clients at a fixed decision rate against one FIFO server,
+reporting p95 decision latency (queueing + service + transfer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.netsim import ShapedLink
+
+
+@dataclasses.dataclass
+class PolicyServer:
+    """serve_fn(payload) -> action; service_time_s measured if not given."""
+
+    serve_fn: Callable
+    service_time_s: Optional[float] = None
+
+    def measure(self, example_payload, *, iters: int = 20) -> float:
+        self.serve_fn(example_payload)  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = self.serve_fn(example_payload)
+        _block(out)
+        self.service_time_s = (time.perf_counter() - t0) / iters
+        return self.service_time_s
+
+
+def _block(x):
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except Exception:
+        pass
+
+
+@dataclasses.dataclass
+class QueueSim:
+    """Deterministic FIFO queue: N clients, fixed rate, one server.
+
+    Decision latency per request = uplink transfer + queueing + service +
+    downlink transfer.  ``max_clients`` sweeps N until p95 exceeds the
+    budget (the paper's Table 6 protocol: 10 Hz, p95 < 100 ms).
+    """
+
+    service_time_s: float
+    uplink: ShapedLink
+    payload_bytes: int
+    action_bytes: int = 64
+    rate_hz: float = 10.0
+    horizon_s: float = 10.0
+
+    def latencies(self, n_clients: int) -> np.ndarray:
+        self.uplink.reset()
+        period = 1.0 / self.rate_hz
+        events = []          # (obs_time, client)
+        for c in range(n_clients):
+            t = c * period / n_clients       # staggered clients
+            while t < self.horizon_s:
+                events.append((t, c))
+                t += period
+        events.sort()
+        server_free = 0.0
+        lat = []
+        for t_obs, _ in events:
+            tr = self.uplink.send(t_obs, self.payload_bytes)
+            start = max(tr.arrival, server_free)
+            done = start + self.service_time_s
+            server_free = done
+            # action return: small payload, same link model (downlink
+            # assumed symmetric and uncongested)
+            t_recv = done + self.uplink.tx_time(self.action_bytes) \
+                + self.uplink.propagation_s
+            lat.append(t_recv - t_obs)
+        return np.asarray(lat)
+
+    def p95(self, n_clients: int) -> float:
+        return float(np.percentile(self.latencies(n_clients), 95))
+
+    def max_clients(self, *, p95_budget_s: float = 0.1,
+                    n_max: int = 512) -> int:
+        best = 0
+        for n in range(1, n_max + 1):
+            if self.p95(n) <= p95_budget_s:
+                best = n
+            elif best:       # monotone beyond saturation
+                break
+        return best

@@ -1,0 +1,124 @@
+"""Optimizers (optax-style pure transforms, built in-repo: offline container).
+
+Provides adam / adamw / sgd with optional global-norm clipping and LR
+schedules.  State is a pytree mirroring the params, so it shards identically
+to the params under pjit (the sharding rules in repro.models.sharding apply
+verbatim to optimizer moments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Params
+    nu: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, OptState, Params], tuple[Params, OptState]]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.0) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Params:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree)
+
+
+def adam(lr: float | Schedule, *, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         clip_norm: Optional[float] = None) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+    def update(params, state, grads):
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = sched(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) *
+                          g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                          jnp.square(g.astype(jnp.float32)), state.nu, grads)
+
+        def upd(p, m, v):
+            mhat = m / b1c
+            vhat = v / b2c
+            delta = lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + lr_t * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, OptState(step, mu, nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(lr, *, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def sgd(lr: float | Schedule, *, momentum: float = 0.0,
+        clip_norm: Optional[float] = None) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        mu = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), mu, mu)
+
+    def update(params, state, grads):
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = sched(step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state.mu, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype),
+            params, mu)
+        return new_params, OptState(step, mu, state.nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def ema_update(avg: Params, new: Params, tau: float) -> Params:
+    """Polyak averaging for target networks: avg <- (1-tau) avg + tau new."""
+    return jax.tree.map(lambda a, n: (1 - tau) * a + tau * n, avg, new)

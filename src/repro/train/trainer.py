@@ -1,0 +1,83 @@
+"""LM trainer: composes model, optimizer, data pipeline, checkpointing.
+
+Runs on whatever devices exist (host CPU for the examples/smoke tests,
+the production mesh on a real cluster); sharding comes from the same
+path-based rules the dry-run uses, so the example driver exercises the
+deployment configuration end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.registry import build_model
+from repro.train import checkpoint
+from repro.train.optimizer import Optimizer, adamw, cosine_schedule
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    batch: int = 8
+    steps: int = 200
+    lr: float = 3e-4
+    warmup: int = 20
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    remat: bool = False
+
+
+class Trainer:
+    def __init__(self, arch_cfg: ArchConfig, tcfg: TrainConfig, *,
+                 optimizer: Optional[Optimizer] = None):
+        self.cfg = arch_cfg
+        self.tcfg = tcfg
+        self.model = build_model(arch_cfg)
+        self.optimizer = optimizer or adamw(
+            cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.steps),
+            clip_norm=1.0)
+
+        def step(params, opt_state, batch):
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: self.model.loss(p, batch, remat=tcfg.remat),
+                has_aux=True)(params)
+            params, opt_state = self.optimizer.update(params, opt_state,
+                                                      grads)
+            return params, opt_state, {"loss": loss, **aux}
+
+        self._step = jax.jit(step, donate_argnums=(0, 1))
+
+    def init(self, seed: int = 0):
+        params = self.model.init(jax.random.PRNGKey(seed))
+        return params, self.optimizer.init(params)
+
+    def run(self, data: Iterator[dict], *, params=None, opt_state=None,
+            hook: Optional[Callable[[int, dict], None]] = None):
+        if params is None:
+            params, opt_state = self.init()
+        history = []
+        t0 = time.perf_counter()
+        for i in range(self.tcfg.steps):
+            batch = next(data)
+            params, opt_state, metrics = self._step(params, opt_state,
+                                                    batch)
+            if i % self.tcfg.log_every == 0 or i == self.tcfg.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = i
+                m["wall_s"] = time.perf_counter() - t0
+                history.append(m)
+                if hook:
+                    hook(i, m)
+            if (self.tcfg.ckpt_dir and self.tcfg.ckpt_every
+                    and i and i % self.tcfg.ckpt_every == 0):
+                checkpoint.save(self.tcfg.ckpt_dir,
+                                {"params": params}, step=i)
+        if self.tcfg.ckpt_dir:
+            checkpoint.save(self.tcfg.ckpt_dir, {"params": params},
+                            step=self.tcfg.steps)
+        return params, opt_state, history

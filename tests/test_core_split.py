@@ -1,0 +1,182 @@
+"""The paper's core: SplitModel partition + wire codecs + break-even
+latency model.  Property tests use hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency import (LinkModel, SplitConfig,
+                                break_even_bandwidth,
+                                decision_latency_server_only,
+                                decision_latency_split,
+                                paper_pi_zero_config)
+from repro.core.miniconv import (PI_ZERO_BUDGET, LayerSpec, MiniConvSpec,
+                                 miniconv_apply, miniconv_init,
+                                 standard_spec)
+from repro.core.split import make_split_policy, straight_through
+from repro.core.wire import CODECS, feature_bytes, frame_bytes_rgba, \
+    get_codec, roundtrip
+from repro.models.registry import get_model
+
+
+# ---------------------------------------------------------------- wire
+@given(st.sampled_from(sorted(CODECS)),
+       st.integers(2, 6), st.integers(2, 6),
+       st.floats(-100, 100), st.floats(0.1, 50))
+@settings(max_examples=60, deadline=None)
+def test_codec_roundtrip_error_bound(name, h, w, loc, scale):
+    codec = get_codec(name)
+    x = loc + scale * jax.random.normal(jax.random.PRNGKey(h * w),
+                                        (h, w, 4))
+    y = roundtrip(codec, x)
+    rng = float(x.max() - x.min())
+    err = float(jnp.abs(y - x).max())
+    if name == "float32":
+        assert err == 0.0
+    elif name == "uint8":
+        assert err <= rng / 255.0 + 1e-4
+    elif name == "int8_channel":
+        amax = np.asarray(jnp.max(jnp.abs(x), axis=(0, 1)))
+        assert err <= float(amax.max()) / 127.0 + 1e-4
+    else:  # bf16
+        assert err <= 0.01 * max(abs(loc) + 3 * scale, 1.0)
+
+
+@given(st.integers(1, 8), st.integers(1, 64), st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_wire_bytes_exact(c, h, w):
+    assert get_codec("uint8").wire_bytes((h, w, c)) == h * w * c + 8
+    assert get_codec("bf16").wire_bytes((h, w, c)) == 2 * h * w * c
+    assert get_codec("float32").wire_bytes((h, w, c)) == 4 * h * w * c
+
+
+def test_feature_vs_frame_bytes_paper_numbers():
+    # paper: X=400, n=3, K=4 -> frame 640000 B, feature 4*(50^2)=10000 B
+    assert frame_bytes_rgba(400) == 4 * 400 * 400
+    assert feature_bytes(400, 3, 4) == 4 * 50 * 50
+
+
+# ------------------------------------------------------------- latency
+def test_paper_break_even_number():
+    """Paper §4.2: X=400, n=3, j~0.1s, K=4 => ~50.4 Mb/s."""
+    b = break_even_bandwidth(paper_pi_zero_config())
+    assert abs(b / 1e6 - 50.4) < 0.1
+
+
+@given(st.integers(64, 1024), st.integers(1, 4), st.sampled_from([4, 16]),
+       st.floats(0.01, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_split_wins_below_break_even(x, n, k, j):
+    cfg = SplitConfig(x_size=x, n_stride2=n, k_channels=k, encode_time_s=j)
+    b_star = break_even_bandwidth(cfg)
+    if b_star <= 0:
+        return
+    for frac, should_win in [(0.5, True), (2.0, False)]:
+        link = LinkModel(bandwidth_bps=b_star * frac)
+        so = decision_latency_server_only(cfg, link, action_bytes=0)
+        sp = decision_latency_split(cfg, link, action_bytes=0)
+        assert (sp < so) == should_win
+
+
+@given(st.floats(0.01, 1.0), st.floats(0.01, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_break_even_monotone_in_encode_time(j1, j2):
+    if j1 > j2:
+        j1, j2 = j2, j1
+    mk = lambda j: break_even_bandwidth(SplitConfig(400, 3, 4, j))
+    assert mk(j1) >= mk(j2)   # slower device => split wins less often
+
+
+# ------------------------------------------------------------ miniconv
+def test_shader_budget_paper_constraints():
+    assert PI_ZERO_BUDGET.max_textures == 8
+    assert PI_ZERO_BUDGET.max_samples == 64
+    assert PI_ZERO_BUDGET.max_in_channels == 32
+    # 4x4 kernel over 12 channels = 48 samples: OK
+    assert PI_ZERO_BUDGET.check_pass(4, 12) == []
+    # 5x5 over 12 channels = 75 samples: over budget
+    assert PI_ZERO_BUDGET.check_pass(5, 12)
+    # 40 input channels exceeds 8 textures
+    assert PI_ZERO_BUDGET.check_pass(1, 40)
+
+
+def test_invalid_spec_raises():
+    bad = MiniConvSpec((LayerSpec(5, 2, 12, 16),))  # 75 samples
+    with pytest.raises(ValueError):
+        bad.validate()
+
+
+@pytest.mark.parametrize("k", [4, 16])
+def test_standard_spec_properties(k):
+    spec = standard_spec(12, k)
+    assert spec.k_out == k
+    assert spec.n_stride2 == 3
+    assert spec.out_spatial(84) == 11
+    # bytes on the wire shrink vs an RGBA frame
+    assert spec.feature_bytes(400) < frame_bytes_rgba(400)
+
+
+def test_miniconv_apply_shapes_and_kernel_path():
+    spec = standard_spec(12, 4)
+    params = miniconv_init(jax.random.PRNGKey(0), spec)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 84, 84, 12))
+    feats = miniconv_apply(params, spec, x)
+    assert feats.shape == (2, 11, 11, 4)
+    feats_k = miniconv_apply(params, spec, x, use_kernel=True)
+    np.testing.assert_allclose(feats, feats_k, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------- split model
+def test_split_policy_composes():
+    spec = standard_spec(12, 4)
+    enc_params = miniconv_init(jax.random.PRNGKey(0), spec)
+    head = jax.random.normal(jax.random.PRNGKey(1), (11 * 11 * 4, 3)) * 0.1
+
+    sm = make_split_policy(
+        lambda p, obs: miniconv_apply(p, spec, obs),
+        lambda p, f: f.reshape(f.shape[0], -1) @ p,
+        codec="float32")
+    obs = jax.random.uniform(jax.random.PRNGKey(2), (2, 84, 84, 12))
+    # deployment path == training path for the lossless codec
+    payload = sm.edge_step(enc_params, obs)
+    out_deploy = sm.server_step(head, payload)
+    out_train = sm.apply({"edge": enc_params, "server": head}, obs)
+    np.testing.assert_allclose(out_deploy, out_train, atol=1e-6)
+
+
+def test_split_policy_uint8_close():
+    spec = standard_spec(12, 4)
+    enc_params = miniconv_init(jax.random.PRNGKey(0), spec)
+    head = jax.random.normal(jax.random.PRNGKey(1), (11 * 11 * 4, 3)) * 0.1
+    sm = make_split_policy(
+        lambda p, obs: miniconv_apply(p, spec, obs),
+        lambda p, f: f.reshape(f.shape[0], -1) @ p,
+        codec="uint8")
+    obs = jax.random.uniform(jax.random.PRNGKey(2), (2, 84, 84, 12))
+    q = sm.server_step(head, sm.edge_step(enc_params, obs))
+    f = sm.edge_apply(enc_params, obs).reshape(2, -1) @ head
+    np.testing.assert_allclose(q, f, atol=0.05, rtol=0.1)
+
+
+def test_straight_through_gradient_is_identity():
+    codec = get_codec("uint8")
+    x = jax.random.uniform(jax.random.PRNGKey(0), (4, 4))
+    g = jax.grad(lambda x: straight_through(codec, x).sum())(x)
+    np.testing.assert_allclose(g, jnp.ones_like(x))
+
+
+def test_transformer_split_equals_monolith():
+    """The paper's partition applied to an assigned LLM: edge + server
+    halves reproduce the monolithic forward exactly (float32 codec)."""
+    cfg, model = get_model("qwen3-0.6b", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 3,
+                                cfg.vocab)
+    mono, _ = model.forward(params, tokens)
+    edge_p, server_p = model.split_params(params, 1)
+    h = model.edge_forward(edge_p, tokens)
+    logits = model.server_forward(server_p, h)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(mono, np.float32),
+                               atol=1e-3, rtol=1e-3)

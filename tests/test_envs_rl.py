@@ -1,0 +1,104 @@
+"""Pure-JAX visual control suite + RL substrate smoke tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs import pendulum
+from repro.envs.wrappers import PixelEnv, make_pixel_env
+from repro.rl.buffers import ReplayBuffer
+from repro.rl.networks import make_encoder
+
+TASKS = ["pendulum", "hopper", "walker"]
+
+
+@pytest.mark.parametrize("task", TASKS)
+def test_pixel_env_obs_contract(task):
+    """Paper's wrapper stack: 3-frame stack of 84x84 crops (channel-last
+    here; VecTransposeImage is a layout detail), float32 in [0,1]."""
+    env = make_pixel_env(task)
+    key = jax.random.PRNGKey(0)
+    state, obs = env.reset(key)
+    assert obs.shape == (84, 84, 9)
+    assert obs.dtype == jnp.float32
+    assert float(obs.min()) >= 0.0 and float(obs.max()) <= 1.0
+    action = jnp.zeros((env.action_dim,))
+    state, obs2, reward, done = env.step(state, action)
+    assert obs2.shape == (84, 84, 9)
+    assert jnp.isfinite(reward)
+
+
+def test_pendulum_dynamics_exact():
+    """Classic-control Pendulum ODE matches gym's closed form."""
+    s = pendulum.PendulumState(theta=jnp.asarray(0.1),
+                               theta_dot=jnp.asarray(0.0),
+                               t=jnp.zeros((), jnp.int32))
+    s2, reward, done = pendulum.step(s, jnp.asarray([0.25]))
+    g, m, l, dt = 10.0, 1.0, 1.0, 0.05
+    u = 0.25 * 2.0   # action scaled by MAX_TORQUE
+    expected_thdot = (3 * g / (2 * l) * np.sin(0.1)
+                      + 3.0 / (m * l ** 2) * u) * dt
+    assert float(s2.theta_dot) == pytest.approx(expected_thdot, rel=1e-5)
+    expected_cost = 0.1 ** 2 + 0.001 * u ** 2
+    assert float(-reward) == pytest.approx(expected_cost, rel=1e-5)
+    assert not bool(done)
+
+
+def test_rgba_uint8_boundary():
+    env = make_pixel_env("pendulum")
+    _, obs = env.reset(jax.random.PRNGKey(0))
+    rgba = PixelEnv.to_rgba_uint8(obs)
+    assert rgba.dtype == jnp.uint8
+    assert rgba.shape == (84, 84, 12)       # 3 frames x RGBA
+    alpha = rgba.reshape(84, 84, 3, 4)[..., 3]
+    assert int(alpha.min()) == 255          # opaque alpha per the paper
+
+
+def test_train_vs_eval_crop():
+    """Random crop during training, deterministic centre crop at eval."""
+    key = jax.random.PRNGKey(0)
+    _, o1 = make_pixel_env("pendulum", train=False).reset(key)
+    _, o2 = make_pixel_env("pendulum", train=False).reset(key)
+    np.testing.assert_array_equal(o1, o2)
+
+
+@pytest.mark.parametrize("name", ["miniconv4", "miniconv16", "full_cnn"])
+def test_encoders(name):
+    enc = make_encoder(name, c_in=9)
+    key = jax.random.PRNGKey(0)
+    params = enc.init(key)
+    obs = jax.random.uniform(key, (2, 84, 84, 9))
+    feats = enc.apply(params, obs)
+    assert feats.ndim == 2 and feats.shape[0] == 2
+    assert not jnp.isnan(feats).any()
+
+
+def test_miniconv_encoder_respects_shader_budget():
+    enc = make_encoder("miniconv16", c_in=9)
+    assert enc.spec is not None
+    enc.spec.validate()   # raises if any pass violates the paper budget
+
+
+def test_replay_buffer_roundtrip():
+    buf = ReplayBuffer(100, (84, 84, 9), 1)
+    obs = np.random.rand(4, 84, 84, 9).astype(np.float32)
+    buf.add_batch(obs, np.zeros((4, 1), np.float32),
+                  np.ones((4,), np.float32), obs, np.zeros((4,), bool))
+    assert len(buf) == 4
+    batch = buf.sample(2)
+    assert batch["obs"].shape == (2, 84, 84, 9)
+    assert float(np.abs(batch["obs"] - obs[:1]).max()) <= 1.0
+    # uint8 quantisation in storage: error bounded by 1/255
+    idx = np.argmin(np.abs(batch["rewards"] - 1.0))
+    assert batch["rewards"][idx] == 1.0
+
+
+@pytest.mark.slow
+def test_rl_training_smoke():
+    """A short DDPG run on pendulum with the MiniConv encoder completes
+    at least one 200-step episode with a finite return (full runs live in
+    benchmarks/learning.py)."""
+    from repro.rl.train import train
+    res = train("pendulum", "miniconv4", total_steps=256)
+    assert len(res.episode_returns) >= 1
+    assert np.isfinite(res.mean)

@@ -1,0 +1,72 @@
+"""Loop-aware HLO analyzer: validated against cost_analysis (loop-free)
+and hand counts (scans, nested scans, collectives)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyse_hlo, parse_computations
+
+
+def _compiled(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_loop_free_matches_cost_analysis():
+    def f(x, w1, w2):
+        return jax.nn.relu(x @ w1) @ w2
+    c = _compiled(f, jnp.ones((128, 256)), jnp.ones((256, 512)),
+                  jnp.ones((512, 64)))
+    t = analyse_hlo(c.as_text())
+    expected = 2 * 128 * 256 * 512 + 2 * 128 * 512 * 64
+    assert abs(t.flops - expected) / expected < 0.01
+
+
+def test_scan_multiplies_by_trip_count():
+    def g(x, w):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        return jax.lax.scan(body, x, None, length=10)[0]
+    c = _compiled(g, jnp.ones((64, 128)), jnp.ones((128, 128)))
+    t = analyse_hlo(c.as_text())
+    expected = 10 * 2 * 64 * 128 * 128
+    assert abs(t.flops - expected) / expected < 0.01
+    # the flat analysis underreports by ~10x — that's why we exist
+    flat = c.cost_analysis()["flops"]
+    assert t.flops > 5 * flat
+
+
+def test_nested_scans():
+    def h(x, w):
+        def outer(x, _):
+            def inner(x, _):
+                return x @ w, None
+            return jax.lax.scan(inner, x, None, length=4)[0], None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+    c = _compiled(h, jnp.ones((32, 64)), jnp.ones((64, 64)))
+    t = analyse_hlo(c.as_text())
+    expected = 12 * 2 * 32 * 64 * 64
+    assert abs(t.flops - expected) / expected < 0.01
+
+
+def test_bytes_nonzero_and_bounded():
+    def f(x):
+        return (x * 2 + 1).sum()
+    c = _compiled(f, jnp.ones((1024, 1024)))
+    t = analyse_hlo(c.as_text())
+    assert t.bytes_accessed >= 4 * 1024 * 1024          # reads x once
+    assert t.bytes_accessed < 40 * 4 * 1024 * 1024      # not absurd
+
+
+def test_parser_handles_comments_and_tuples():
+    hlo = """
+HloModule m
+ENTRY %main (a: (s32[], f32[4,4])) -> f32[4,4] {
+  %a = (s32[], f32[4,4]{1,0}) parameter(0)
+  %g = f32[4,4]{1,0} get-tuple-element(%a), index=1
+  ROOT %d = f32[4,4]{1,0} dot(%g, /*index=5*/%g), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    comps, entry = parse_computations(hlo)
+    assert entry == "main"
+    t = analyse_hlo(hlo)
+    assert t.flops == 2 * 4 * 4 * 4

@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (reduced variants: <=2 layers,
+d_model<=256, <=4 experts) — one forward/train step on CPU, output shapes
++ no NaNs; decode-vs-forward consistency for the decoder families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.models.registry import (abstract_params, build_model, get_model,
+                                   input_specs, text_len)
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _batch(cfg, key, B=2, S=32):
+    batch = {"tokens": jax.random.randint(key, (B, S), 3, cfg.vocab)}
+    if cfg.family in ("vlm", "audio"):
+        batch["frontend_embeds"] = jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_reduced_smoke_forward_and_train_step(arch_id):
+    cfg, model = get_model(arch_id, reduced=True)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+
+    logits, _ = model.forward(params, batch["tokens"],
+                              frontend_embeds=batch.get("frontend_embeds"))
+    S_total = batch["tokens"].shape[1] + (
+        cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, S_total, cfg.vocab)
+    assert not jnp.isnan(logits).any()
+
+    # one train step
+    def loss_fn(p):
+        return model.loss(p, batch, remat=False)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert jnp.isfinite(loss)
+    gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_reduced_decode_step(arch_id):
+    cfg, model = get_model(arch_id, reduced=True)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    B, S = 2, 16
+    caches = model.init_cache(B, S, jnp.float32)
+    if cfg.family == "audio":
+        fe = jax.random.normal(key, (B, cfg.n_frontend_tokens,
+                                     cfg.d_model)) * 0.02
+        enc = model.encode(params, fe)
+        caches = model.prefill_cross_cache(params, enc, caches)
+    tok = jax.random.randint(key, (B, 1), 3, cfg.vocab)
+    logits, new_caches = model.decode_step(params, tok, caches,
+                                           jnp.int32(0))
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab
+    assert not jnp.isnan(logits).any()
+    assert jax.tree.structure(new_caches) == jax.tree.structure(caches)
+
+
+@pytest.mark.parametrize("arch_id", ["qwen3-0.6b", "mamba2-130m",
+                                     "recurrentgemma-9b"])
+def test_decode_matches_forward_end_to_end(arch_id):
+    """Greedy decode logits == teacher-forced forward logits, per family
+    (dense / ssm / hybrid)."""
+    cfg, model = get_model(arch_id, reduced=True)
+    key = jax.random.PRNGKey(2)
+    params = model.init(key)
+    B, S = 1, 16        # multiple of the reduced SSD chunk (8)
+    tokens = jax.random.randint(key, (B, S), 3, cfg.vocab)
+    full, _ = model.forward(params, tokens)
+    caches = model.init_cache(B, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, caches = model.decode_step(params, tokens[:, t:t + 1], caches,
+                                       jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("shape_id", sorted(SHAPES))
+def test_input_specs_abstract(arch_id, shape_id):
+    """input_specs never allocates and matches the assigned shapes."""
+    spec = input_specs(arch_id, shape_id)
+    shape = SHAPES[shape_id]
+    cfg = ARCHS[arch_id]
+    if shape.kind in ("train", "prefill"):
+        t = spec["batch"]["tokens"]
+        assert t.shape == (shape.global_batch, text_len(cfg, shape))
+        assert t.dtype == jnp.int32
+        if cfg.family in ("vlm", "audio"):
+            fe = spec["batch"]["frontend_embeds"]
+            assert fe.shape == (shape.global_batch, cfg.n_frontend_tokens,
+                                cfg.d_model)
+    else:
+        assert spec["token"].shape == (shape.global_batch, 1)
+        leaves = jax.tree.leaves(spec["caches"])
+        assert leaves, "decode must carry a cache"
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_exact_assigned_dims(arch_id):
+    """The full config matches the assignment table verbatim."""
+    expected = {
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "mamba2-130m": (24, 768, 1, 1, 0, 50280),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+    }[arch_id]
+    c = ARCHS[arch_id]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == expected
+
+
+def test_moe_configs():
+    l4 = ARCHS["llama4-scout-17b-a16e"].moe
+    assert (l4.n_experts, l4.top_k) == (16, 1)
+    q2 = ARCHS["qwen2-moe-a2.7b"].moe
+    assert (q2.n_experts, q2.top_k, q2.n_shared_experts) == (60, 4, 4)
+
+
+def test_abstract_params_no_alloc():
+    cfg, model = get_model("llama3-8b")        # FULL 8B config, no alloc
+    p = abstract_params(model)
+    n = sum(np.prod(l.shape) for l in jax.tree.leaves(p))
+    assert abs(n - cfg.param_count()) / cfg.param_count() < 0.02

@@ -1,0 +1,81 @@
+"""Serving runtime: shaped link determinism/FIFO, queue simulation
+monotonicity, and agreement between DecisionLoop and the paper's
+analytic latency model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency import (LinkModel, SplitConfig,
+                                decision_latency_server_only,
+                                decision_latency_split)
+from repro.serving.client import DecisionLoop
+from repro.serving.netsim import ShapedLink, shaped
+from repro.serving.server import QueueSim
+
+
+def test_link_tx_time():
+    link = ShapedLink(bandwidth_bps=8e6, propagation_s=0.0)
+    assert link.tx_time(1_000_000) == pytest.approx(1.0)
+
+
+def test_link_fifo_serialises():
+    link = ShapedLink(bandwidth_bps=8e6, propagation_s=0.001)
+    t1 = link.send(0.0, 500_000)      # 0.5 s tx
+    t2 = link.send(0.0, 500_000)      # must queue behind t1
+    assert t1.tx_done == pytest.approx(0.5)
+    assert t2.start == pytest.approx(0.5)
+    assert t2.arrival == pytest.approx(1.001)
+
+
+def test_link_reset():
+    link = shaped(10)
+    link.send(0.0, 10_000)
+    link.reset()
+    assert link.send(0.0, 10_000).start == 0.0
+
+
+@given(st.floats(1, 1000), st.integers(100, 1_000_000))
+@settings(max_examples=30, deadline=None)
+def test_decision_loop_matches_latency_model(mbps, payload):
+    """netsim pipeline == paper's closed-form model for a single client."""
+    link = ShapedLink(bandwidth_bps=mbps * 1e6, propagation_s=0.002)
+    loop = DecisionLoop(link=link, server_time_s=0.01, split=False,
+                        payload_bytes=payload, action_bytes=64)
+    got = loop.decision_latency()
+    want = (8 * payload / (mbps * 1e6) + 0.01
+            + 8 * 64 / (mbps * 1e6) + 0.004)
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_split_vs_server_only_crossover():
+    """Bandwidth sweep reproduces the paper's crossover structure: split
+    wins at low bandwidth, loses at high bandwidth."""
+    frame, feat, j, srv = 640_000, 10_000, 0.1, 0.005
+    lat = {}
+    for mbps in (10, 25, 50, 100, 1000):
+        so = DecisionLoop(link=shaped(mbps), server_time_s=srv,
+                          split=False, payload_bytes=frame)
+        sp = DecisionLoop(link=shaped(mbps), server_time_s=srv,
+                          split=True, edge_time_s=j, payload_bytes=feat)
+        lat[mbps] = (so.median_latency(10), sp.median_latency(10))
+    assert lat[10][1] < lat[10][0]          # split wins at 10 Mb/s
+    assert lat[1000][1] > lat[1000][0]      # compute-bound at 1 Gb/s
+
+
+def test_queue_p95_monotone_in_clients():
+    q = QueueSim(service_time_s=0.008, uplink=shaped(100),
+                 payload_bytes=10_000, horizon_s=5.0)
+    p95s = [q.p95(n) for n in (1, 4, 16, 64)]
+    assert all(a <= b + 1e-9 for a, b in zip(p95s, p95s[1:]))
+
+
+def test_scalability_split_serves_more_clients():
+    """Table 6 structure: smaller service time + payload => more clients
+    within the same p95 budget."""
+    so = QueueSim(service_time_s=0.008, uplink=shaped(100),
+                  payload_bytes=640_000, horizon_s=5.0)
+    sp = QueueSim(service_time_s=0.003, uplink=shaped(100),
+                  payload_bytes=10_000, horizon_s=5.0)
+    n_so = so.max_clients(n_max=128)
+    n_sp = sp.max_clients(n_max=128)
+    assert n_sp > n_so >= 1
