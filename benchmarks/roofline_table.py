@@ -1,7 +1,12 @@
 """§Roofline table: renders the dry-run sweep results (JSONL emitted by
 repro.launch.dryrun) as the per-(arch x shape x mesh) roofline table used
 in EXPERIMENTS.md, with the dominant-term classification and the
-MODEL_FLOPS utilisation ratio."""
+MODEL_FLOPS utilisation ratio.
+
+``--miniconv`` additionally renders the MiniConv encoder roofline derived
+from the compiled :class:`~repro.core.passplan.PassPlan` — per-layer pass
+count, samples/pixel vs the shader budget, FLOPs, and bytes moved — so the
+table always agrees with what the kernels actually execute."""
 from __future__ import annotations
 
 import argparse
@@ -41,12 +46,49 @@ def render(rows, *, only_baseline: bool = True):
               f"{d['useful_flops_ratio']:>7.3f} {peak:>8.2f}G")
 
 
+def miniconv_table(x_sizes=(84, 400), ks=(4, 16), c_in: int = 12):
+    """Per-layer MiniConv roofline, derived entirely from the PassPlan."""
+    from repro.core.miniconv import standard_spec
+
+    hdr = (f"{'spec':<14} {'x':>4} {'layer':>5} {'passes':>6} "
+           f"{'samples':>8} {'budget%':>8} {'mflops':>8} {'kB_in':>7} "
+           f"{'kB_out':>7} {'flops/B':>8}")
+    print(hdr)
+    for k in ks:
+        spec = standard_spec(c_in=c_in, k=k)
+        for x in x_sizes:
+            plan = spec.plan(x)
+            for lp in plan.layers:
+                passes = [p for p in plan.passes if p.layer == lp.index]
+                samples = max(p.samples for p in passes)
+                in_b = lp.in_h * lp.in_w * lp.c_in * 4
+                out_b = lp.out_h * lp.out_w * lp.c_out * 4
+                w_b = lp.kernel ** 2 * lp.c_in * lp.c_out * 4
+                flops = sum(p.flops for p in passes)
+                # per-pass execution re-reads the input once per pass
+                bytes_moved = in_b * len(passes) + out_b + w_b
+                print(f"miniconv{k:<6} {x:>4} {lp.index:>5} "
+                      f"{len(passes):>6} {samples:>8} "
+                      f"{100 * samples / plan.budget.max_samples:>7.0f}% "
+                      f"{flops / 1e6:>8.2f} {in_b / 1e3:>7.1f} "
+                      f"{out_b / 1e3:>7.1f} {flops / bytes_moved:>8.1f}")
+            print(f"miniconv{k:<6} {x:>4} total {plan.total_passes:>6} "
+                  f"{plan.max_pass_samples:>8} "
+                  f"{'':>8} {plan.flops_per_frame / 1e6:>8.2f} "
+                  f"feature_bytes={plan.feature_bytes}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--glob", default="results/dryrun_*.jsonl")
     ap.add_argument("--all", action="store_true",
                     help="include override (perf-iteration) rows")
+    ap.add_argument("--miniconv", action="store_true",
+                    help="render the PassPlan-derived MiniConv roofline")
     args = ap.parse_args(argv)
+    if args.miniconv:
+        miniconv_table()
+        return
     paths = sorted(glob.glob(args.glob))
     if not paths:
         print(f"no dry-run results match {args.glob}; run "

@@ -27,11 +27,12 @@ def main() -> None:
         csv.append((f"learning/{r.task}/{r.encoder}", "final_return",
                     r.final))
 
-    section("Figure 2: per-frame time vs input size")
+    section("Figure 2: per-frame time vs input size (fused vs per-pass)")
     from benchmarks import frame_time
-    for row in frame_time.run(sizes=(64, 128, 256), n=10):
-        csv.append((f"frame_time/x{row['x']}", "compiled_ms",
-                    row["compiled_ms"]))
+    for row in frame_time.run_compare(sizes=(64, 128), n=10)[0]:
+        for mode in ("xla", "fused", "per_pass"):
+            csv.append((f"frame_time/x{row['x']}", f"{mode}_ms",
+                        row[f"{mode}_ms"]))
 
     section("Figure 3: sustained inference")
     from benchmarks import sustained
@@ -64,6 +65,9 @@ def main() -> None:
     section("Roofline table (from dry-run artifacts, if present)")
     from benchmarks import roofline_table
     roofline_table.main([])
+
+    section("MiniConv pass-plan roofline")
+    roofline_table.miniconv_table()
 
     section("CSV")
     print("name,metric,value")

@@ -9,7 +9,11 @@ from repro.core.miniconv import (MiniConvSpec, LayerSpec, ShaderBudget,
                                  PI_ZERO_BUDGET, miniconv_apply,
                                  miniconv_feature_shape, miniconv_init,
                                  standard_spec)
-from repro.core.split import SplitModel, make_split_policy, straight_through
+from repro.core.passplan import (LayerPlan, PassPlan, ShaderPass,
+                                 build_pass_plan, count_passes,
+                                 out_spatial_chain)
+from repro.core.split import (SplitModel, make_miniconv_split,
+                              make_split_policy, straight_through)
 from repro.core.wire import (CODECS, WireCodec, feature_bytes,
                              frame_bytes_rgba, get_codec, roundtrip)
 
@@ -18,7 +22,9 @@ __all__ = [
     "decision_latency_server_only", "decision_latency_split",
     "paper_pi_zero_config", "MiniConvSpec", "LayerSpec", "ShaderBudget",
     "PI_ZERO_BUDGET", "miniconv_apply", "miniconv_feature_shape",
-    "miniconv_init", "standard_spec", "SplitModel", "make_split_policy",
-    "straight_through", "CODECS", "WireCodec", "feature_bytes",
-    "frame_bytes_rgba", "get_codec", "roundtrip",
+    "miniconv_init", "standard_spec", "LayerPlan", "PassPlan", "ShaderPass",
+    "build_pass_plan", "count_passes", "out_spatial_chain", "SplitModel",
+    "make_miniconv_split", "make_split_policy", "straight_through", "CODECS",
+    "WireCodec", "feature_bytes", "frame_bytes_rgba", "get_codec",
+    "roundtrip",
 ]

@@ -40,7 +40,12 @@ class SplitConfig:
 
     @property
     def feature_bytes(self) -> int:
-        return self.k_channels * (self.x_size // 2 ** self.n_stride2) ** 2
+        # PassPlan spatial rule: ceil per stride-2 layer (matches the real
+        # feature shape; the continuous X/2^n model below is the paper's
+        # closed-form approximation of this).
+        from repro.core.passplan import out_spatial_chain
+        return self.k_channels * out_spatial_chain(
+            self.x_size, (2,) * self.n_stride2) ** 2
 
 
 def break_even_bandwidth(cfg: SplitConfig) -> float:

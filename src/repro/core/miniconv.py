@@ -104,7 +104,8 @@ class MiniConvSpec:
 
     @property
     def total_passes(self) -> int:
-        return sum(l.n_passes for l in self.layers)
+        from repro.core.passplan import count_passes  # lazy: avoids cycle
+        return count_passes(self)
 
     def validate(self) -> None:
         errs: list[str] = []
@@ -118,22 +119,21 @@ class MiniConvSpec:
             raise ValueError("MiniConvSpec violates shader budget:\n  " +
                              "\n  ".join(errs))
 
+    def plan(self, h: int, w: Optional[int] = None):
+        """Lower this spec onto an input size (see ``core.passplan``)."""
+        from repro.core.passplan import build_pass_plan  # lazy: avoids cycle
+        return build_pass_plan(self, h, w)
+
     def out_spatial(self, x: int) -> int:
-        for l in self.layers:
-            x = math.ceil(x / l.stride)
-        return x
+        from repro.core.passplan import out_spatial_chain
+        return out_spatial_chain(x, (l.stride for l in self.layers))
 
     def feature_bytes(self, x: int) -> int:
         """Transmitted feature bytes for an X-by-X input (uint8 wire)."""
-        s = self.out_spatial(x)
-        return s * s * self.k_out
+        return self.plan(x).feature_bytes
 
     def flops_per_frame(self, x: int) -> int:
-        total, h = 0, x
-        for l in self.layers:
-            h = math.ceil(h / l.stride)
-            total += 2 * h * h * l.kernel * l.kernel * l.c_in * l.c_out
-        return total
+        return self.plan(x).flops_per_frame
 
 
 def standard_spec(c_in: int = 12, k: int = 4, *, n_stride2: int = 3,
@@ -172,26 +172,62 @@ _ACTS: dict[str, Callable] = {
 }
 
 
-def miniconv_apply(params, spec: MiniConvSpec, x, *, use_kernel: bool = False):
+def _normalize_mode(use_kernel) -> str:
+    if use_kernel is False or use_kernel is None:
+        return "xla"
+    if use_kernel is True:        # backwards compat: old boolean flag
+        return "per_pass"
+    if use_kernel in ("xla", "fused", "per_pass", "grouped"):
+        return use_kernel
+    raise ValueError(f"use_kernel must be False|'fused'|'per_pass'|'grouped',"
+                     f" got {use_kernel!r}")
+
+
+def miniconv_apply(params, spec: MiniConvSpec, x, *,
+                   use_kernel=False, tile_h: int = 8, plan=None):
     """x: (B, H, W, C_in) float in [0,1] -> (B, H', W', K).
 
-    ``use_kernel=True`` routes each pass through the Pallas shader-pass
-    kernel (interpret mode on CPU); default uses XLA convs (training path).
+    Execution modes (``use_kernel``):
+
+    * ``False`` / ``"xla"``  — XLA SAME convs (the training path).
+    * ``"per_pass"``         — legacy reference: one ``pallas_call`` per
+      :class:`~repro.core.passplan.ShaderPass` (the shader oracle).
+    * ``"grouped"``          — one ``pallas_call`` per layer; output-group is
+      a grid dimension so the input row is loaded once per row and reused
+      across groups.
+    * ``"fused"``            — the whole :class:`~repro.core.passplan.PassPlan`
+      as ONE ``pallas_call``: layers chained through VMEM-resident
+      intermediates, ``tile_h`` output rows per grid step.
+
+    ``use_kernel=True`` is accepted as an alias for ``"per_pass"``.
+    ``plan`` lets callers that already compiled the PassPlan (e.g.
+    ``core.split.make_miniconv_split``) reuse it instead of re-lowering
+    per call; it must match the input's spatial size.
     """
-    if use_kernel:
+    mode = _normalize_mode(use_kernel)
+    if mode == "fused":
+        from repro.kernels.miniconv_pass import miniconv_encoder
+        if plan is None:
+            plan = spec.plan(x.shape[1], x.shape[2])
+        elif (plan.in_h, plan.in_w) != (x.shape[1], x.shape[2]):
+            raise ValueError(
+                f"plan was built for {(plan.in_h, plan.in_w)} input but got "
+                f"{x.shape[1:3]}; rebuild with spec.plan(h, w)")
+        ws = [params[f"layer{i}"]["kernel"] for i in range(len(spec.layers))]
+        bs = [params[f"layer{i}"]["bias"] for i in range(len(spec.layers))]
+        return miniconv_encoder(x, ws, bs, plan, tile_h=tile_h)
+    if mode in ("per_pass", "grouped"):
         from repro.kernels.ops import miniconv_layer  # lazy: avoids cycles
     for i, l in enumerate(spec.layers):
         p = params[f"layer{i}"]
-        if use_kernel:
-            x = miniconv_layer(x, p["kernel"], p["bias"], stride=l.stride)
-        else:
+        if mode == "xla":
             x = conv2d(p, x, stride=l.stride, padding="SAME")
+        else:
+            x = miniconv_layer(x, p["kernel"], p["bias"], stride=l.stride,
+                               fused_groups=(mode == "grouped"))
         x = _ACTS[l.activation](x)
     return x
 
 
 def miniconv_feature_shape(spec: MiniConvSpec, h: int, w: int) -> tuple:
-    for l in spec.layers:
-        h = math.ceil(h / l.stride)
-        w = math.ceil(w / l.stride)
-    return (h, w, spec.k_out)
+    return spec.plan(h, w).feature_shape

@@ -1,0 +1,263 @@
+"""Pass-plan IR: the compiled form of a MiniConv encoder.
+
+The paper (§3) compiles a small conv encoder into an ordered sequence of
+fragment-shader passes, each subject to the embedded-GPU constraint model:
+
+* a pass renders ONE RGBA target      -> ``ShaderPass.out_lo/out_hi``
+  (<= 4 output channels);
+* a pass binds <= 8 input textures    -> ``ShaderPass.texture_bindings``
+  (4 packed channels per texture, so C_in <= 32);
+* a pass has a per-pixel sampling
+  budget (64 on the Pi Zero 2 W)      -> ``ShaderPass.samples``
+  = k_h * k_w * ceil(C_in / 4).
+
+:class:`PassPlan` makes that compiled schedule a first-class object: it
+lowers a :class:`~repro.core.miniconv.MiniConvSpec` plus a concrete input
+size into per-layer records (:class:`LayerPlan`: spatial shapes, SAME
+padding, channel-group count) and a flat ordered pass list
+(:class:`ShaderPass`: texture bindings, kernel slice, stride, activation,
+output group, per-pass sample count).  Every pass is checked against the
+:class:`~repro.core.miniconv.ShaderBudget` at *plan build time*, so an
+un-buildable plan never reaches a kernel.
+
+The plan is the single source of truth for derived quantities that were
+previously re-computed (inconsistently — ceil vs floor) in several places:
+
+* pass count             -> ``PassPlan.total_passes`` / :func:`count_passes`
+* output spatial shape   -> ``PassPlan.out_h/out_w`` / :func:`out_spatial_chain`
+* transmitted bytes      -> ``PassPlan.feature_bytes`` (uint8 wire)
+* FLOPs per frame        -> ``PassPlan.flops_per_frame``
+
+``MiniConvSpec.out_spatial/feature_bytes/flops_per_frame``,
+``core.wire.feature_bytes``, ``core.latency.SplitConfig.feature_bytes`` and
+the ``benchmarks/roofline_table --miniconv`` table all re-derive from here.
+
+The Pallas execution paths consume the plan directly:
+``repro.kernels.miniconv_pass.miniconv_encoder`` executes the whole plan as
+ONE fused kernel (layers chained through VMEM-resident intermediates,
+``TILE_H`` output rows per grid step), while the legacy per-pass kernel
+executes one ``pallas_call`` per :class:`ShaderPass` and serves as the
+reference oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional, Sequence
+
+from repro.core.miniconv import (LayerSpec, MiniConvSpec, ShaderBudget,
+                                 PI_ZERO_BUDGET)
+
+
+# ---------------------------------------------------------------------------
+# Spatial primitives (THE ceil rule — everything else derives from these)
+# ---------------------------------------------------------------------------
+
+def out_size(x: int, stride: int) -> int:
+    """Output side of a SAME conv: ceil(x / stride)."""
+    return -(-x // stride)
+
+
+def out_spatial_chain(x: int, strides: Iterable[int]) -> int:
+    """Spatial side after a chain of SAME convs with the given strides."""
+    for s in strides:
+        x = out_size(x, s)
+    return x
+
+
+def same_pads(size: int, kernel: int, stride: int) -> tuple[int, int]:
+    """(lo, hi) zero padding so a VALID conv reproduces XLA's SAME conv."""
+    total = max((out_size(size, stride) - 1) * stride + kernel - size, 0)
+    return total // 2, total - total // 2
+
+
+def count_passes(spec: MiniConvSpec) -> int:
+    """Total shader passes for a spec (spatial-size independent)."""
+    return sum(-(-l.c_out // 4) for l in spec.layers)
+
+
+def _round4(c: int) -> int:
+    return -(-c // 4) * 4
+
+
+# ---------------------------------------------------------------------------
+# IR records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One conv layer lowered onto a concrete input size."""
+
+    index: int
+    kernel: int
+    stride: int
+    activation: str
+    c_in: int
+    c_out: int
+    in_h: int
+    in_w: int
+    out_h: int
+    out_w: int
+    pad_top: int
+    pad_bottom: int
+    pad_left: int
+    pad_right: int
+
+    @property
+    def n_groups(self) -> int:
+        return -(-self.c_out // 4)
+
+    @property
+    def c_in_pad(self) -> int:
+        return _round4(self.c_in)
+
+    @property
+    def c_out_pad(self) -> int:
+        return _round4(self.c_out)
+
+    @property
+    def padded_in_h(self) -> int:
+        return self.in_h + self.pad_top + self.pad_bottom
+
+    @property
+    def padded_in_w(self) -> int:
+        return self.in_w + self.pad_left + self.pad_right
+
+    @property
+    def flops(self) -> int:
+        return (2 * self.out_h * self.out_w * self.kernel * self.kernel
+                * self.c_in * self.c_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShaderPass:
+    """One fragment-shader pass: the unit the paper's compiler emits."""
+
+    layer: int                  # owning layer index
+    group: int                  # output-group index within the layer
+    kernel: int
+    stride: int
+    activation: str
+    c_in: int
+    out_lo: int                 # output channel slice [out_lo, out_hi)
+    out_hi: int                 # out_hi - out_lo <= 4 (one RGBA target)
+    out_h: int
+    out_w: int
+
+    @property
+    def texture_bindings(self) -> tuple[tuple[int, int], ...]:
+        """Input channel ranges packed 4-per-texture, as bound by the pass."""
+        return tuple((lo, min(lo + 4, self.c_in))
+                     for lo in range(0, self.c_in, 4))
+
+    @property
+    def in_textures(self) -> int:
+        return len(self.texture_bindings)
+
+    @property
+    def samples(self) -> int:
+        """Texture samples per output pixel (the paper's budgeted quantity)."""
+        return self.kernel * self.kernel * self.in_textures
+
+    @property
+    def flops(self) -> int:
+        return (2 * self.out_h * self.out_w * self.kernel * self.kernel
+                * self.c_in * (self.out_hi - self.out_lo))
+
+
+@dataclasses.dataclass(frozen=True)
+class PassPlan:
+    """An ordered, budget-checked shader-pass schedule for one input size."""
+
+    spec: MiniConvSpec
+    in_h: int
+    in_w: int
+    layers: tuple[LayerPlan, ...]
+    passes: tuple[ShaderPass, ...]
+    budget: ShaderBudget = PI_ZERO_BUDGET
+
+    # ---- derived truths ---------------------------------------------------
+    @property
+    def out_h(self) -> int:
+        return self.layers[-1].out_h
+
+    @property
+    def out_w(self) -> int:
+        return self.layers[-1].out_w
+
+    @property
+    def k_out(self) -> int:
+        return self.layers[-1].c_out
+
+    @property
+    def feature_shape(self) -> tuple[int, int, int]:
+        return (self.out_h, self.out_w, self.k_out)
+
+    @property
+    def total_passes(self) -> int:
+        return len(self.passes)
+
+    @property
+    def feature_bytes(self) -> int:
+        """Bytes of the transmitted K-channel feature map (uint8 wire)."""
+        return self.out_h * self.out_w * self.k_out
+
+    @property
+    def flops_per_frame(self) -> int:
+        return sum(p.flops for p in self.passes)
+
+    @property
+    def max_pass_samples(self) -> int:
+        return max(p.samples for p in self.passes)
+
+    def validate(self) -> None:
+        errs: list[str] = []
+        for p in self.passes:
+            for e in self.budget.check_pass(p.kernel, p.c_in):
+                errs.append(f"layer {p.layer} pass {p.group}: {e}")
+        if errs:
+            raise ValueError("PassPlan violates shader budget:\n  " +
+                             "\n  ".join(errs))
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def build_pass_plan(spec: MiniConvSpec, h: int, w: Optional[int] = None, *,
+                    validate: bool = True) -> PassPlan:
+    """Lower ``spec`` applied to an (h, w) input into a :class:`PassPlan`.
+
+    Raises ``ValueError`` at build time if any emitted pass exceeds the
+    spec's :class:`ShaderBudget` — the kernel layer can assume every plan it
+    receives is deployable.
+    """
+    w = h if w is None else w
+    layers: list[LayerPlan] = []
+    passes: list[ShaderPass] = []
+    cur_h, cur_w = h, w
+    for i, l in enumerate(spec.layers):
+        oh, ow = out_size(cur_h, l.stride), out_size(cur_w, l.stride)
+        pt, pb = same_pads(cur_h, l.kernel, l.stride)
+        pl_, pr = same_pads(cur_w, l.kernel, l.stride)
+        layers.append(LayerPlan(index=i, kernel=l.kernel, stride=l.stride,
+                                activation=l.activation, c_in=l.c_in,
+                                c_out=l.c_out, in_h=cur_h, in_w=cur_w,
+                                out_h=oh, out_w=ow, pad_top=pt, pad_bottom=pb,
+                                pad_left=pl_, pad_right=pr))
+        for g, lo in enumerate(range(0, l.c_out, 4)):
+            passes.append(ShaderPass(layer=i, group=g, kernel=l.kernel,
+                                     stride=l.stride, activation=l.activation,
+                                     c_in=l.c_in, out_lo=lo,
+                                     out_hi=min(lo + 4, l.c_out),
+                                     out_h=oh, out_w=ow))
+        cur_h, cur_w = oh, ow
+    plan = PassPlan(spec=spec, in_h=h, in_w=w, layers=tuple(layers),
+                    passes=tuple(passes), budget=spec.budget)
+    if validate:
+        plan.validate()
+    return plan
+
+
+__all__ = ["LayerPlan", "PassPlan", "ShaderPass", "build_pass_plan",
+           "count_passes", "out_size", "out_spatial_chain", "same_pads"]

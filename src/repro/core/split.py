@@ -22,7 +22,7 @@ quantised wire; both modes are supported via ``quantize_in_train``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +38,9 @@ class SplitModel:
     server_apply: Callable[[Params, jnp.ndarray], Any]
     codec: WireCodec
     quantize_in_train: bool = False
+    # For MiniConv edges: the compiled PassPlan the edge half executes
+    # (see repro.core.passplan).  None for non-MiniConv splits.
+    plan: Any = None
 
     # ---- deployment path ---------------------------------------------------
     def edge_step(self, edge_params, obs):
@@ -49,7 +52,11 @@ class SplitModel:
         feats = self.codec.decode(payload)
         return self.server_apply(server_params, feats)
 
-    def wire_bytes(self, feature_shape: tuple) -> int:
+    def wire_bytes(self, feature_shape: Optional[tuple] = None) -> int:
+        if feature_shape is None:
+            if self.plan is None:
+                raise ValueError("feature_shape required for plan-less split")
+            feature_shape = self.plan.feature_shape
         return self.codec.wire_bytes(feature_shape)
 
     # ---- training path (single process, differentiable) --------------------
@@ -71,3 +78,28 @@ def make_split_policy(edge_apply, server_apply, *, codec: str = "uint8",
     return SplitModel(edge_apply=edge_apply, server_apply=server_apply,
                       codec=get_codec(codec),
                       quantize_in_train=quantize_in_train)
+
+
+def make_miniconv_split(spec, server_apply, *, h: int, w: Optional[int] = None,
+                        codec: str = "uint8", use_kernel="fused",
+                        quantize_in_train: bool = False) -> SplitModel:
+    """Split policy whose edge half is a MiniConv encoder compiled to a
+    :class:`~repro.core.passplan.PassPlan`.
+
+    The plan is built (and budget-checked) once, up front, for the concrete
+    input size the edge device will see; it then serves both execution
+    (``use_kernel="fused"`` runs the whole plan as one Pallas kernel) and
+    accounting (``SplitModel.wire_bytes()`` with no argument).
+    """
+    from repro.core.miniconv import miniconv_apply  # lazy: avoids cycle
+
+    plan = spec.plan(h, w)
+
+    def edge_apply(params, obs):
+        # the prebuilt plan is reused (and size-checked) on every frame
+        return miniconv_apply(params, spec, obs, use_kernel=use_kernel,
+                              plan=plan if use_kernel == "fused" else None)
+
+    return SplitModel(edge_apply=edge_apply, server_apply=server_apply,
+                      codec=get_codec(codec),
+                      quantize_in_train=quantize_in_train, plan=plan)

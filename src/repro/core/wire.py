@@ -125,6 +125,13 @@ def frame_bytes_rgba(x_size: int) -> int:
 
 
 def feature_bytes(x_size: int, n_stride2: int, k: int) -> int:
-    """Bytes of the K-channel feature map after n stride-2 layers (paper)."""
-    s = x_size // (2 ** n_stride2)
+    """Bytes of the K-channel feature map after n stride-2 layers (paper).
+
+    Derived via the PassPlan spatial rule (ceil per stride-2 layer, matching
+    SAME convs and the real feature shape) — the old ``x // 2**n`` floor
+    disagreed with the emitted tensor for non-divisible sizes (e.g. 100x100
+    with n=3 produces a 13x13 map, not 12x12).
+    """
+    from repro.core.passplan import out_spatial_chain  # lazy: import order
+    s = out_spatial_chain(x_size, (2,) * n_stride2)
     return k * s * s

@@ -1,32 +1,59 @@
-"""Pallas TPU kernel for one MiniConv "shader pass".
+"""Pallas TPU kernels for MiniConv shader passes — three execution tiers.
 
 A fragment-shader pass computes each output pixel by sampling a k x k
 neighbourhood of <= 8 bound textures (4 channels each) and writes one RGBA
 (4-channel) output texture.  The TPU adaptation keeps the pass structure but
-re-tiles it for VMEM/MXU:
+re-tiles it for VMEM/MXU.  This module provides the pass schedule's three
+execution tiers (see ``repro.core.passplan`` for the schedule itself):
 
-* grid = (batch, out_row, kernel_row): each grid step loads ONE input row
-  (the analogue of one row of texture samples), multiplies it against one
-  kernel row, and accumulates into the output row's VMEM scratch.  The
-  kernel-row grid dimension is sequential ("arbitrary"), so the output block
-  is revisited and accumulated in fp32, exactly like the shader's running
-  sum over its sampling budget.
-* the inner product per kernel column is a (W_out, C_in) @ (C_in, 4) matmul
-  — C_in <= 32 by the shader budget, so the whole pass working set
-  (one input row + one kernel + one output row) stays far below VMEM.
+1. :func:`miniconv_pass` — the legacy reference: ONE pallas_call per
+   :class:`~repro.core.passplan.ShaderPass`.  grid = (batch, out_row,
+   kernel_row); each step loads one input row, multiplies it against one
+   kernel row and accumulates into fp32 VMEM scratch.  This is the oracle
+   the fused paths are tested against.
 
-Stride-2 passes subsample the input row grid, mirroring the shader's
-half-resolution render target.
+2. :func:`miniconv_layer_grouped` — one pallas_call per LAYER.  The
+   output-group becomes a grid dimension (innermost), so consecutive grid
+   steps share the same input-row block: the row is loaded into VMEM once
+   and reused across all ceil(c_out/4) groups instead of once per pass.
+   The per-group fp32 accumulator lives in a (n_groups, W_out, 4) VMEM
+   scratch.
+
+3. :func:`miniconv_encoder` — one pallas_call for the WHOLE encoder
+   (the fused analogue of the paper's full pass sequence).  grid =
+   (batch, out_row_tile); layer intermediates never leave the chip:
+   layers 0..L-2 are computed once per batch element (on the first tile
+   step) and the SAME-padded input of the final layer is parked in a VMEM
+   scratch, from which every grid step computes ``tile_h`` rows of the
+   final feature map (multi-row output tiling).  All output groups of a
+   layer are produced by a single (H*W, C_in) @ (C_in, C_out) matmul.
+   Channel counts are zero-padded to multiples of 4 (RGBA packing), so
+   specs with c_out % 4 != 0 execute correctly; the wrapper slices the
+   result back to the true channel count.
+
+Stride-2 passes subsample the input rows/cols, mirroring the shader's
+half-resolution render target.  On very large inputs the fused kernel keeps
+the full input image plus the last intermediate in VMEM (~a few MB at
+X=400); for bigger frames lower ``tile_h`` does not help — split the spec
+or fall back to the per-layer kernels.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.miniconv import _ACTS
+from repro.kernels.pallas_compat import tpu_compiler_params
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: legacy single-pass kernel (the reference oracle)
+# ---------------------------------------------------------------------------
 
 def _pass_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, stride: int,
                  kw: int, w_out: int):
@@ -91,7 +118,263 @@ def miniconv_pass(x, w, b, *, stride: int = 1, interpret: bool = True):
                                lambda b_, q, i: (b_, q, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, h_out, w_out, 4), x.dtype),
         scratch_shapes=[pltpu.VMEM((w_out, 4), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w, b.reshape(1, 4))
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: one pallas_call per layer, output-group as a grid dimension
+# ---------------------------------------------------------------------------
+
+def _layer_group_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, stride: int,
+                        kw: int, w_out: int):
+    """One (batch, out_row, kernel_row, group) grid step.
+
+    The group dimension is innermost, so the input-row block index is
+    constant across the group sweep — Pallas keeps the row resident in VMEM
+    and only the (kw, C_in, 4) weight slice and (1, 4) bias change per step.
+
+    x_ref: (1, 1, W_in, C_in); w_ref: (kh, kw, C_in, 4) group slice;
+    b_ref: (1, 4) group slice; o_ref: (1, 1, W_out, 4) group output;
+    acc_ref: (n_groups, W_out, 4) fp32 scratch (one accumulator per group).
+    """
+    i = pl.program_id(2)          # kernel row index
+    g = pl.program_id(3)          # output-group index
+    kh = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[pl.ds(g, 1)] = jnp.broadcast_to(
+            b_ref[0].astype(jnp.float32), (1, w_out, 4))
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (W_in, C_in)
+    w = w_ref[i].astype(jnp.float32)         # (kw, C_in, 4)
+
+    acc = acc_ref[pl.ds(g, 1)][0]
+    for j in range(kw):
+        cols = jax.lax.slice(x, (j, 0),
+                             (j + (w_out - 1) * stride + 1, x.shape[1]),
+                             (stride, 1))     # (W_out, C_in)
+        acc = acc + cols @ w[j]
+    acc_ref[pl.ds(g, 1)] = acc[None]
+
+    @pl.when(i == kh - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[pl.ds(g, 1)][0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+def miniconv_layer_grouped(x, w, b, *, stride: int = 1,
+                           interpret: bool = True):
+    """All output groups of one layer in a single pallas_call (VALID conv).
+
+    x: (B, H_in, W_in, C_in); w: (kh, kw, C_in, C_out) with C_out % 4 == 0
+    (callers pad; see ``repro.kernels.ops.miniconv_layer``); b: (C_out,).
+    """
+    B, h_in, w_in, c_in = x.shape
+    kh, kw, c_in_w, c_out = w.shape
+    assert c_in == c_in_w and c_out % 4 == 0, (x.shape, w.shape)
+    n_groups = c_out // 4
+    h_out = (h_in - kh) // stride + 1
+    w_out = (w_in - kw) // stride + 1
+
+    grid = (B, h_out, kh, n_groups)
+    return pl.pallas_call(
+        functools.partial(_layer_group_kernel, stride=stride, kw=kw,
+                          w_out=w_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, w_in, c_in),
+                         lambda b_, q, i, g: (b_, q * stride + i, 0, 0)),
+            pl.BlockSpec((kh, kw, c_in, 4),
+                         lambda b_, q, i, g: (0, 0, 0, g)),
+            pl.BlockSpec((1, 4), lambda b_, q, i, g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w_out, 4),
+                               lambda b_, q, i, g: (b_, q, 0, g)),
+        out_shape=jax.ShapeDtypeStruct((B, h_out, w_out, c_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n_groups, w_out, 4), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(x, w, b.reshape(n_groups, 4))
+
+
+# ---------------------------------------------------------------------------
+# Tier 3: the whole encoder as ONE fused kernel
+# ---------------------------------------------------------------------------
+
+def _conv_from_padded(xp, w, b, *, out_h: int, out_w: int, stride: int,
+                      kernel: int):
+    """SAME conv of a pre-padded fp32 image held in VMEM.
+
+    xp: (H_pad, W_pad, C_in); w: (k, k, C_in, C_out); b: (C_out,).
+    Returns (out_h, out_w, C_out) fp32.  Each (i, j) tap is one
+    (out_h*out_w, C_in) @ (C_in, C_out) MXU matmul — all output groups of
+    the layer in a single contraction.
+    """
+    c_in = xp.shape[-1]
+    c_out = w.shape[-1]
+    acc = jnp.broadcast_to(b, (out_h, out_w, c_out)).astype(jnp.float32)
+    for i in range(kernel):
+        for j in range(kernel):
+            win = jax.lax.slice(
+                xp, (i, j, 0),
+                (i + (out_h - 1) * stride + 1,
+                 j + (out_w - 1) * stride + 1, c_in),
+                (stride, stride, 1))              # (out_h, out_w, C_in)
+            tap = win.reshape(out_h * out_w, c_in) @ w[i, j]
+            acc = acc + tap.reshape(out_h, out_w, c_out)
+    return acc
+
+
+def _encoder_kernel(*refs, plan, tile_h: int, scratch_rows: int):
+    """One (batch, out_row_tile) grid step of the fused encoder.
+
+    refs layout: x_ref, w_0..w_{L-1}, b_0..b_{L-1}, o_ref[, p_scr].
+    ``p_scr`` (absent when L == 1) holds the SAME-padded input of the final
+    layer for the current batch element: (scratch_rows, W_pad, C_in_pad)
+    fp32, built once on the first tile step and reused by every tile.
+    """
+    layers = plan.layers
+    L = len(layers)
+    x_ref = refs[0]
+    w_refs = refs[1:1 + L]
+    b_refs = refs[1 + L:1 + 2 * L]
+    o_ref = refs[1 + 2 * L]
+    p_scr = refs[1 + 2 * L + 1] if L > 1 else None
+    t = pl.program_id(1)
+    last = layers[-1]
+
+    if L > 1:
+        @pl.when(t == 0)
+        def _chain_front_layers():
+            # Layers 0..L-2 run once per batch element; intermediates stay
+            # on-chip and the final layer's padded input is parked in VMEM.
+            y = x_ref[0].astype(jnp.float32)          # padded layer-0 input
+            for l in range(L - 1):
+                m = layers[l]
+                y = _conv_from_padded(
+                    y, w_refs[l][...].astype(jnp.float32),
+                    b_refs[l][0].astype(jnp.float32),
+                    out_h=m.out_h, out_w=m.out_w, stride=m.stride,
+                    kernel=m.kernel)
+                y = _ACTS[m.activation](y)
+                nxt = layers[l + 1]
+                pad = jnp.zeros((scratch_rows if l == L - 2
+                                 else nxt.padded_in_h,
+                                 nxt.padded_in_w, nxt.c_in_pad), jnp.float32)
+                y = jax.lax.dynamic_update_slice(
+                    pad, y, (nxt.pad_top, nxt.pad_left, 0))
+            p_scr[...] = y
+
+        src_ref = p_scr
+    else:
+        src_ref = None
+
+    # Final layer: tile_h output rows per grid step.
+    rows_need = (tile_h - 1) * last.stride + last.kernel
+    row0 = t * tile_h * last.stride
+    if L > 1:
+        xp = src_ref[pl.ds(row0, rows_need)]
+    else:
+        xp = x_ref[0, pl.ds(row0, rows_need)].astype(jnp.float32)
+    acc = _conv_from_padded(
+        xp, w_refs[-1][...].astype(jnp.float32),
+        b_refs[-1][0].astype(jnp.float32),
+        out_h=tile_h, out_w=last.out_w, stride=last.stride,
+        kernel=last.kernel)
+    o_ref[0] = _ACTS[last.activation](acc).astype(o_ref.dtype)
+
+
+def miniconv_encoder(x, weights, biases, plan, *, tile_h: int = 8,
+                     interpret=None):
+    """Execute a whole :class:`~repro.core.passplan.PassPlan` as ONE kernel.
+
+    x: (B, H, W, C_in) with (H, W) == (plan.in_h, plan.in_w);
+    weights/biases: per-layer lists matching ``plan.spec.layers``.
+    Returns (B, plan.out_h, plan.out_w, plan.k_out) in x.dtype — bitwise
+    semantics match the per-pass path (SAME padding, fp32 accumulation,
+    per-layer activation) within float tolerance.
+    """
+    # resolve the env-dependent default OUTSIDE the jit cache so flipping
+    # REPRO_PALLAS_COMPILE between calls is honoured
+    if interpret is None:
+        interpret = (not os.environ.get("REPRO_PALLAS_COMPILE")
+                     and jax.default_backend() != "tpu")
+    return _miniconv_encoder(x, weights, biases, plan, tile_h=tile_h,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "tile_h", "interpret"))
+def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
+                      interpret: bool):
+    layers = plan.layers
+    L = len(layers)
+    B, h, w_sz, c_in = x.shape
+    assert (h, w_sz) == (plan.in_h, plan.in_w), (x.shape, plan.in_h,
+                                                 plan.in_w)
+    assert c_in == layers[0].c_in and len(weights) == L == len(biases)
+
+    tile_h = max(1, min(tile_h, plan.out_h))
+    n_tiles = -(-plan.out_h // tile_h)
+    last = layers[-1]
+    # Rows the last tile may read past the exact padded input: over-allocate
+    # zero rows at the bottom so every pl.ds stays in bounds.
+    rows_need_max = (n_tiles * tile_h - 1) * last.stride + last.kernel
+    scratch_rows = max(last.padded_in_h, rows_need_max)
+
+    # Zero-pad channels to RGBA multiples and bake in layer-0 SAME padding.
+    first = layers[0]
+    x0_rows = scratch_rows if L == 1 else first.padded_in_h
+    xp = jnp.zeros((B, x0_rows, first.padded_in_w, first.c_in_pad), x.dtype)
+    xp = jax.lax.dynamic_update_slice(
+        xp, x, (0, first.pad_top, first.pad_left, 0))
+    ws, bs = [], []
+    for l, (wt, bi) in enumerate(zip(weights, biases)):
+        m = layers[l]
+        wp = jnp.zeros((m.kernel, m.kernel, m.c_in_pad, m.c_out_pad),
+                       wt.dtype)
+        wp = jax.lax.dynamic_update_slice(wp, wt, (0, 0, 0, 0))
+        bp = jnp.zeros((1, m.c_out_pad), bi.dtype)
+        bp = jax.lax.dynamic_update_slice(bp, bi[None], (0, 0))
+        ws.append(wp)
+        bs.append(bp)
+
+    in_specs = [pl.BlockSpec((1, x0_rows, first.padded_in_w, first.c_in_pad),
+                             lambda b_, t: (b_, 0, 0, 0))]
+    for l in range(L):
+        m = layers[l]
+        in_specs.append(pl.BlockSpec(
+            (m.kernel, m.kernel, m.c_in_pad, m.c_out_pad),
+            lambda b_, t: (0, 0, 0, 0)))
+    for l in range(L):
+        m = layers[l]
+        in_specs.append(pl.BlockSpec((1, m.c_out_pad),
+                                     lambda b_, t: (0, 0)))
+    scratch_shapes = []
+    if L > 1:
+        scratch_shapes.append(pltpu.VMEM(
+            (scratch_rows, last.padded_in_w, last.c_in_pad), jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_encoder_kernel, plan=plan, tile_h=tile_h,
+                          scratch_rows=scratch_rows),
+        grid=(B, n_tiles),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, tile_h, last.out_w, last.c_out_pad),
+                               lambda b_, t: (b_, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (B, n_tiles * tile_h, last.out_w, last.c_out_pad), x.dtype),
+        scratch_shapes=scratch_shapes,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, *ws, *bs)
+    return out[:, :plan.out_h, :, :plan.k_out]
+
+
+__all__ = ["miniconv_pass", "miniconv_layer_grouped", "miniconv_encoder"]

@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.miniconv_pass import miniconv_pass
+from repro.kernels.miniconv_pass import (miniconv_encoder,
+                                         miniconv_layer_grouped,
+                                         miniconv_pass)
 
 
 def _default_interpret() -> bool:
@@ -35,21 +37,45 @@ def same_pad(x, kernel: int, stride: int):
                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
 
 
+def _pad_groups(kernel, bias):
+    """Zero-pad the output channels to a multiple of 4 (RGBA packing).
+
+    ``LayerSpec.n_passes = ceil(c_out/4)`` admits c_out % 4 != 0; the final
+    output group then renders a partially-used RGBA target.  The kernels
+    always write full 4-channel groups, so we pad the weights/bias with
+    zero channels and the caller slices the result back.
+    """
+    c_out = kernel.shape[-1]
+    pad = (-c_out) % 4
+    if pad:
+        kernel = jnp.pad(kernel, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        bias = jnp.pad(bias, ((0, pad),))
+    return kernel, bias, c_out
+
+
 def miniconv_layer(x, kernel, bias, *, stride: int = 1,
-                   interpret: Optional[bool] = None):
+                   interpret: Optional[bool] = None,
+                   fused_groups: bool = False):
     """One MiniConv layer = ceil(c_out/4) shader passes (SAME padding).
 
     x: (B,H,W,C_in); kernel: (kh,kw,C_in,C_out); bias: (C_out,).
+    ``fused_groups=True`` executes all output groups in a single
+    pallas_call (output-group as a grid dimension); the default runs one
+    pallas_call per pass — the legacy reference path.
     """
     interpret = _default_interpret() if interpret is None else interpret
     kh = kernel.shape[0]
-    c_out = kernel.shape[-1]
-    assert c_out % 4 == 0, "shader passes write 4 channels each"
+    kernel, bias, c_out = _pad_groups(kernel, bias)
     xp = same_pad(x, kh, stride)
-    outs = [miniconv_pass(xp, kernel[..., g:g + 4], bias[g:g + 4],
-                          stride=stride, interpret=interpret)
-            for g in range(0, c_out, 4)]
-    return jnp.concatenate(outs, axis=-1) if len(outs) > 1 else outs[0]
+    if fused_groups:
+        out = miniconv_layer_grouped(xp, kernel, bias, stride=stride,
+                                     interpret=interpret)
+    else:
+        outs = [miniconv_pass(xp, kernel[..., g:g + 4], bias[g:g + 4],
+                              stride=stride, interpret=interpret)
+                for g in range(0, kernel.shape[-1], 4)]
+        out = jnp.concatenate(outs, axis=-1) if len(outs) > 1 else outs[0]
+    return out[..., :c_out]
 
 
 def causal_attention(q, k, v, *, sliding_window: Optional[int] = None,
@@ -64,4 +90,5 @@ def causal_attention(q, k, v, *, sliding_window: Optional[int] = None,
 
 
 __all__ = ["miniconv_layer", "causal_attention", "miniconv_pass",
-           "flash_attention", "same_pad"]
+           "miniconv_layer_grouped", "miniconv_encoder", "flash_attention",
+           "same_pad"]

@@ -1,0 +1,18 @@
+"""Version compatibility helpers for the Pallas TPU API.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+JAX releases; this repo runs on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:                       # older JAX (<= 0.4.x)
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+__all__ = ["tpu_compiler_params"]

@@ -23,8 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.miniconv import (MiniConvSpec, miniconv_apply,
-                                 miniconv_feature_shape, miniconv_init,
-                                 standard_spec)
+                                 miniconv_init, standard_spec)
 from repro.nn.layers import conv2d, conv2d_init, dense, dense_init
 from repro.nn.module import KeyGen, orthogonal_init
 
@@ -62,9 +61,11 @@ def full_cnn_apply(params, obs):
 def miniconv_encoder_init(key, spec: MiniConvSpec, *, h: int = 84,
                           w: int = 84):
     """Edge (conv passes) + server (projection) halves, kept separate so
-    the deployment split is a dict split."""
+    the deployment split is a dict split.  The projection width comes from
+    the compiled PassPlan — the single source of truth for the edge
+    feature shape."""
     kg = KeyGen(key)
-    fh, fw, k = miniconv_feature_shape(spec, h, w)
+    fh, fw, k = spec.plan(h, w).feature_shape
     return {
         "edge": miniconv_init(kg(), spec),
         "server": {"proj": dense_init(kg(), fh * fw * k, FEATURE_DIM,
@@ -73,7 +74,10 @@ def miniconv_encoder_init(key, spec: MiniConvSpec, *, h: int = 84,
 
 
 def miniconv_edge_apply(params, spec: MiniConvSpec, obs, *,
-                        use_kernel: bool = False):
+                        use_kernel=False):
+    """On-device half.  ``use_kernel`` selects the execution tier:
+    False (XLA, training), "per_pass", "grouped", or "fused" (one Pallas
+    kernel for the whole pass plan — the deployment path)."""
     return miniconv_apply(params, spec, obs, use_kernel=use_kernel)
 
 
@@ -91,9 +95,18 @@ class Encoder:
     apply: Any                      # (params, obs) -> (B, 512)
     spec: MiniConvSpec | None = None
 
+    def plan(self, h: int = 84, w: int = 84):
+        """Compiled pass plan of the edge half (None for full_cnn)."""
+        return None if self.spec is None else self.spec.plan(h, w)
 
-def make_encoder(name: str, c_in: int = 9) -> Encoder:
-    """name in {"full_cnn", "miniconv4", "miniconv16"}."""
+
+def make_encoder(name: str, c_in: int = 9, *, use_kernel=False) -> Encoder:
+    """name in {"full_cnn", "miniconv4", "miniconv16"}.
+
+    ``use_kernel`` selects the MiniConv execution tier (False = XLA for
+    training; "fused" runs the whole pass plan as one Pallas kernel for
+    deployment-path benchmarks).
+    """
     if name == "full_cnn":
         return Encoder("full_cnn",
                        lambda key: full_cnn_init(key, c_in),
@@ -103,7 +116,8 @@ def make_encoder(name: str, c_in: int = 9) -> Encoder:
         spec = standard_spec(c_in=c_in, k=k)
 
         def apply(params, obs):
-            feats = miniconv_edge_apply(params["edge"], spec, obs)
+            feats = miniconv_edge_apply(params["edge"], spec, obs,
+                                        use_kernel=use_kernel)
             return miniconv_server_apply(params["server"], feats)
 
         return Encoder(name,

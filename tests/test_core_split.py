@@ -1,9 +1,12 @@
 """The paper's core: SplitModel partition + wire codecs + break-even
-latency model.  Property tests use hypothesis."""
+latency model.  Property tests use hypothesis (optional dev dependency:
+see requirements-dev.txt; the module is skipped when absent)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.latency import (LinkModel, SplitConfig,

@@ -1,0 +1,110 @@
+"""PassPlan IR: budget properties, shape truth, and agreement between every
+place that used to duplicate the ceil/floor shape math."""
+import math
+
+import jax
+import pytest
+
+from repro.core.latency import SplitConfig
+from repro.core.miniconv import (LayerSpec, MiniConvSpec, ShaderBudget,
+                                 miniconv_feature_shape, standard_spec)
+from repro.core.passplan import (build_pass_plan, count_passes, out_size,
+                                 out_spatial_chain, same_pads)
+from repro.core.wire import feature_bytes
+
+SPECS = {
+    "k4": standard_spec(12, 4),
+    "k16": standard_spec(12, 16),
+    "c6": MiniConvSpec((LayerSpec(4, 2, 4, 6),
+                        LayerSpec(3, 2, 6, 16),
+                        LayerSpec(3, 1, 16, 6, activation="sigmoid"))),
+    "single": MiniConvSpec((LayerSpec(3, 1, 8, 4),)),
+}
+SIZES = [64, 84, 100, 101, 400]
+
+
+@pytest.mark.parametrize("name", sorted(SPECS))
+@pytest.mark.parametrize("x", SIZES)
+def test_every_pass_respects_budget(name, x):
+    spec = SPECS[name]
+    plan = build_pass_plan(spec, x)
+    for p in plan.passes:
+        assert spec.budget.check_pass(p.kernel, p.c_in) == []
+        assert p.samples <= spec.budget.max_samples
+        assert p.in_textures <= spec.budget.max_textures
+        assert 1 <= p.out_hi - p.out_lo <= 4
+    assert plan.max_pass_samples <= spec.budget.max_samples
+
+
+@pytest.mark.parametrize("name", sorted(SPECS))
+@pytest.mark.parametrize("x", SIZES)
+def test_total_passes_matches_spec(name, x):
+    spec = SPECS[name]
+    plan = build_pass_plan(spec, x)
+    assert plan.total_passes == spec.total_passes == count_passes(spec)
+    assert plan.total_passes == sum(l.n_passes for l in spec.layers)
+    # groups partition the channels exactly
+    for lp in plan.layers:
+        slices = [(p.out_lo, p.out_hi) for p in plan.passes
+                  if p.layer == lp.index]
+        assert slices[0][0] == 0 and slices[-1][1] == lp.c_out
+        for (a, b), (c, d) in zip(slices, slices[1:]):
+            assert b == c
+
+
+@pytest.mark.parametrize("name", sorted(SPECS))
+@pytest.mark.parametrize("x", SIZES)
+def test_plan_shapes_are_the_truth(name, x):
+    """plan == MiniConvSpec.* == actual XLA conv output shapes."""
+    import jax.numpy as jnp
+    from repro.core.miniconv import miniconv_apply, miniconv_init
+
+    spec = SPECS[name]
+    plan = build_pass_plan(spec, x)
+    assert plan.feature_shape == miniconv_feature_shape(spec, x, x)
+    assert plan.out_h == spec.out_spatial(x)
+    assert plan.feature_bytes == spec.feature_bytes(x)
+    assert plan.flops_per_frame == spec.flops_per_frame(x)
+    if x > 100:       # keep the conv check cheap
+        return
+    params = miniconv_init(jax.random.PRNGKey(0), spec)
+    obs = jnp.zeros((1, x, x, spec.layers[0].c_in))
+    feats = miniconv_apply(params, spec, obs)
+    assert feats.shape[1:] == plan.feature_shape
+
+
+def test_wire_and_latency_agree_with_plan_for_non_divisible_sizes():
+    """The ISSUE-1 satellite: 100x100 through 3 stride-2 layers is 13x13
+    (ceil), not 12x12 (the old floor accounting)."""
+    assert out_spatial_chain(100, (2, 2, 2)) == 13
+    assert feature_bytes(100, 3, 4) == 4 * 13 * 13
+    assert SplitConfig(100, 3, 4, 0.1).feature_bytes == 4 * 13 * 13
+    # divisible sizes unchanged (paper numbers)
+    assert feature_bytes(400, 3, 4) == 4 * 50 * 50
+    spec = standard_spec(12, 4)
+    assert spec.feature_bytes(100) == build_pass_plan(spec, 100).feature_bytes
+
+
+def test_same_pads_matches_xla_rule():
+    for size in (7, 8, 84, 101):
+        for k, s in ((3, 1), (3, 2), (4, 2)):
+            lo, hi = same_pads(size, k, s)
+            out = out_size(size, s)
+            assert lo + hi == max((out - 1) * s + k - size, 0)
+            assert hi - lo in (0, 1)
+
+
+def test_over_budget_plan_raises_at_build_time():
+    bad = MiniConvSpec((LayerSpec(5, 2, 12, 16),))    # 75 samples > 64
+    with pytest.raises(ValueError):
+        build_pass_plan(bad, 64)
+    tight = ShaderBudget(max_samples=48)
+    ok = MiniConvSpec((LayerSpec(4, 2, 12, 16),), budget=tight)  # exactly 48
+    build_pass_plan(ok, 64)
+
+
+def test_texture_bindings_pack_rgba():
+    plan = build_pass_plan(standard_spec(12, 4), 64)
+    p0 = plan.passes[0]
+    assert p0.texture_bindings == ((0, 4), (4, 8), (8, 12))
+    assert p0.in_textures == 3 and p0.samples == 4 * 4 * 3

@@ -3,6 +3,8 @@ monotonicity, and agreement between DecisionLoop and the paper's
 analytic latency model."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.latency import (LinkModel, SplitConfig,
