@@ -5,10 +5,15 @@ server-only (full RGBA frame transmitted, Full-CNN + head on the server)
 vs split-policy (MiniConv on-device, K=4 uint8 features transmitted).
 Compute-stage times are measured on this host with the real jitted
 networks; the link is the deterministic token-bucket shaper.
+
+``--clients N`` additionally reports p95 decision latency for N clients
+sharing one split-policy server, FIFO vs micro-batching (the batch-aware
+queue simulation fed by the measured batched service-time curve).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -20,13 +25,27 @@ from repro.rl.networks import (full_cnn_apply, full_cnn_init,
                                miniconv_server_apply, mlp_apply, mlp_init)
 from repro.serving.client import DecisionLoop, EdgeClient
 from repro.serving.netsim import shaped
-from repro.serving.server import PolicyServer
+from repro.serving.server import (BatchingPolicyServer, BatchQueueSim,
+                                  PolicyServer, QueueSim)
 
 X_SIZE = 84           # paper's task-scale observation (84x84, 3 frames)
 C_IN = 12             # RGBA x 3 stacked frames at the upload boundary
 
 
-def build(*, k: int = 4, seed: int = 0):
+@dataclasses.dataclass(frozen=True)
+class ServingSetup:
+    """Jitted halves + payload accounting shared by the serving benchmarks."""
+
+    edge_fn: object               # obs -> single-request payload
+    split_server_fn: object       # payload -> action
+    split_server_batch_fn: object  # stacked micro-batch payload -> actions
+    mono_server_fn: object        # obs -> action
+    obs: object
+    wire_bytes: int
+    frame_bytes: int
+
+
+def build(*, k: int = 4, seed: int = 0) -> ServingSetup:
     key = jax.random.PRNGKey(seed)
     spec = standard_spec(c_in=C_IN, k=k)
     enc = miniconv_encoder_init(key, spec, h=X_SIZE, w=X_SIZE)
@@ -46,25 +65,33 @@ def build(*, k: int = 4, seed: int = 0):
         return mlp_apply(head, z)
 
     @jax.jit
+    def split_server_batch_fn(payload_batch):
+        # one decode + one projection + one head over the whole micro-batch
+        # (each request keeps its own quantisation header)
+        feats = codec.decode_batch(payload_batch)
+        z = miniconv_server_apply(enc["server"], feats)
+        return mlp_apply(head, z)
+
+    @jax.jit
     def mono_server_fn(obs):
         return mlp_apply(head, full_cnn_apply(cnn, obs))
 
     obs = jax.random.uniform(key, (1, X_SIZE, X_SIZE, C_IN))
     wire_bytes = codec.wire_bytes((1, fh, fw, fc))
     frame_bytes = frame_bytes_rgba(X_SIZE) * 3      # 3 stacked RGBA frames
-    return edge_fn, split_server_fn, mono_server_fn, obs, wire_bytes, \
-        frame_bytes
+    return ServingSetup(edge_fn, split_server_fn, split_server_batch_fn,
+                        mono_server_fn, obs, wire_bytes, frame_bytes)
 
 
 def run(bandwidths=(10, 25, 50, 100), *, n_decisions: int = 1000,
         k: int = 4):
-    (edge_fn, split_srv, mono_srv, obs, wire_bytes,
-     frame_bytes) = build(k=k)
-    client = EdgeClient(encode_fn=edge_fn, wire_bytes=wire_bytes)
-    j = client.measure(obs)
-    payload = edge_fn(obs)
-    s_split = PolicyServer(serve_fn=split_srv).measure(payload)
-    s_mono = PolicyServer(serve_fn=mono_srv).measure(obs)
+    setup = build(k=k)
+    wire_bytes, frame_bytes = setup.wire_bytes, setup.frame_bytes
+    client = EdgeClient(encode_fn=setup.edge_fn, wire_bytes=wire_bytes)
+    j = client.measure(setup.obs)
+    payload = setup.edge_fn(setup.obs)
+    s_split = PolicyServer(serve_fn=setup.split_server_fn).measure(payload)
+    s_mono = PolicyServer(serve_fn=setup.mono_server_fn).measure(setup.obs)
     print(f"  stages: edge={j*1e3:.2f}ms split_srv={s_split*1e3:.2f}ms "
           f"mono_srv={s_mono*1e3:.2f}ms wire={wire_bytes}B "
           f"frame={frame_bytes}B")
@@ -85,14 +112,69 @@ def run(bandwidths=(10, 25, 50, 100), *, n_decisions: int = 1000,
     return rows
 
 
+def measure_service_curve(setup: ServingSetup, *, max_batch: int = 8,
+                          max_wait_s: float = 0.0, iters: int = 10):
+    """Measure the batched split server's t(B) curve on this host.
+
+    Shared by this benchmark and ``benchmarks.scalability`` so the two
+    FIFO-vs-batched reports can never drift apart in how they sample the
+    curve.  Returns ({batch: seconds}, BatchServiceModel).
+    """
+    payload = setup.edge_fn(setup.obs)
+    bsrv = BatchingPolicyServer(serve_batch_fn=setup.split_server_batch_fn,
+                                max_batch=max_batch, max_wait_s=max_wait_s)
+    times = bsrv.measure(payload, batch_sizes=tuple(
+        b for b in (1, 2, 4, 8, 16) if b <= max_batch), iters=iters)
+    model = bsrv.service_model()
+    curve = " ".join(f"t({b})={t*1e3:.2f}ms" for b, t in sorted(times.items()))
+    print(f"  batched service curve: {curve}")
+    return times, model
+
+
+def run_queue(*, n_clients: int = 8, mbps: float = 100.0, k: int = 4,
+              max_batch: int = 8, max_wait_ms: float = 0.0,
+              rate_hz: float = 10.0, setup: ServingSetup = None):
+    """p95 decision latency at N clients: FIFO server vs micro-batching.
+
+    The batched p95 uses the MEASURED service-time curve t(B) of the
+    batched split server, so the comparison reflects real amortisation on
+    this host, not an assumed speedup.
+    """
+    setup = setup or build(k=k)
+    times, model = measure_service_curve(setup, max_batch=max_batch,
+                                         max_wait_s=max_wait_ms / 1e3)
+    common = dict(service_time_s=model(1), uplink=shaped(mbps),
+                  payload_bytes=setup.wire_bytes, rate_hz=rate_hz,
+                  horizon_s=5.0)
+    fifo = QueueSim(**common)
+    bat = BatchQueueSim(**common, max_batch=max_batch,
+                        max_wait_s=max_wait_ms / 1e3, service_model=model)
+    row = {"n_clients": n_clients,
+           "service_ms": {b: t * 1e3 for b, t in times.items()},
+           "fifo_p95_ms": fifo.p95(n_clients) * 1e3,
+           "batched_p95_ms": bat.p95(n_clients) * 1e3}
+    print(f"  N={n_clients} @ {rate_hz:.0f}Hz: p95 FIFO "
+          f"{row['fifo_p95_ms']:.2f} ms vs micro-batched "
+          f"{row['batched_p95_ms']:.2f} ms "
+          f"(max_batch={max_batch}, max_wait={max_wait_ms:.0f}ms)")
+    return row
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bandwidths", default="10,25,50,100")
     ap.add_argument("--decisions", type=int, default=1000)
     ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=8,
+                    help="N clients for the FIFO-vs-batched p95 report "
+                         "(0 disables)")
+    ap.add_argument("--max-batch", type=int, default=8)
     args = ap.parse_args(argv)
     run(tuple(float(b) for b in args.bandwidths.split(",")),
         n_decisions=args.decisions, k=args.k)
+    if args.clients:
+        run_queue(n_clients=args.clients, k=args.k,
+                  max_batch=args.max_batch)
 
 
 if __name__ == "__main__":

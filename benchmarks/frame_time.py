@@ -39,6 +39,20 @@ def time_frames(fn, x, *, n: int = 20) -> tuple[float, float]:
     return float(np.mean(ts)), float(np.std(ts))
 
 
+def median_frames(fn, x, *, n: int = 8, warm: int = 3) -> float:
+    """Median with several warm-up calls: the first couple of post-compile
+    interpret-mode runs are 2-3x slower (allocator/trace-cache warm-up),
+    which poisons a 2-sample mean."""
+    for _ in range(warm):
+        jax.block_until_ready(fn(x))
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
 def _path(params, spec, mode):
     if mode == "xla":
         return jax.jit(lambda x: miniconv_apply(params, spec, x))
@@ -74,22 +88,56 @@ def run(sizes=(64, 128, 256, 400), *, k: int = 4, n: int = 20,
 
 
 def run_compare(sizes=(64, 128, 256), *, k: int = 4, n: int = 20,
-                artifact: str = ARTIFACT):
-    """Fused vs legacy per-pass vs XLA.
+                batch: int = 8, artifact: str = ARTIFACT):
+    """Fused vs legacy per-pass vs XLA, plus batched vs sequential fused.
 
-    Returns (rows, ok) where ``ok`` is the ISSUE-1 acceptance criterion:
-    fused <= per_pass at every size.
+    Returns (rows, ok) where ``ok`` combines the ISSUE-1 criterion
+    (fused <= per_pass at every size) with the ISSUE-2 criterion: one
+    batched (B, H, W, C) fused launch is no slower than B sequential
+    single-frame fused launches at every size.
     """
     rows = run(sizes, k=k, n=n, modes=("xla", "fused", "per_pass"),
-               artifact=artifact)
-    ok = all(r["fused_ms"] <= r["per_pass_ms"] for r in rows)
+               artifact=None)
+    spec = standard_spec(c_in=4, k=k)
+    params = miniconv_init(jax.random.PRNGKey(0), spec)
+    fused = _path(params, spec, "fused")
+    for r in rows:
+        xb = jax.random.uniform(jax.random.PRNGKey(1),
+                                (batch, r["x"], r["x"], 4))
+        frames = [xb[i:i + 1] for i in range(batch)]
+
+        def seq(frames_, _fused=fused):
+            # the per-request serving path: B distinct frames, B
+            # dispatches, B pad/slice epilogues, each blocked like a real
+            # response
+            for fr in frames_:
+                out = jax.block_until_ready(_fused(fr))
+            return out
+
+        n_b = max(n // 2, 5)
+        r["fused_batched_ms"] = median_frames(fused, xb, n=n_b) * 1e3
+        r["fused_seq_ms"] = median_frames(seq, frames, n=n_b) * 1e3
+        r["batch"] = batch
+    ok_fused = all(r["fused_ms"] <= r["per_pass_ms"] for r in rows)
+    ok_batched = all(r["fused_batched_ms"] <= r["fused_seq_ms"]
+                     for r in rows)
     for r in rows:
         speedup = r["per_pass_ms"] / max(r["fused_ms"], 1e-9)
+        bspeed = r["fused_seq_ms"] / max(r["fused_batched_ms"], 1e-9)
         print(f"  x={r['x']}: fused {r['fused_ms']:.2f}ms vs per_pass "
               f"{r['per_pass_ms']:.2f}ms ({speedup:.1f}x), "
-              f"xla {r['xla_ms']:.2f}ms")
-    print(f"  fused <= per_pass at every size: {ok}")
-    return rows, ok
+              f"xla {r['xla_ms']:.2f}ms | B={batch} batched "
+              f"{r['fused_batched_ms']:.2f}ms vs sequential "
+              f"{r['fused_seq_ms']:.2f}ms ({bspeed:.2f}x)")
+    print(f"  fused <= per_pass at every size: {ok_fused}")
+    print(f"  batched (B={batch}) <= {batch} sequential fused calls at "
+          f"every size: {ok_batched}")
+    if artifact:
+        with open(artifact, "w") as f:
+            json.dump({"spec_k": k, "batch": batch, "rows": rows}, f,
+                      indent=2)
+        print(f"  wrote {artifact}")
+    return rows, ok_fused and ok_batched
 
 
 def main(argv=None):

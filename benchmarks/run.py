@@ -49,11 +49,14 @@ def main() -> None:
         csv.append((f"latency/{row['mbps']:g}mbps", "split_ms",
                     row["split_ms"]))
 
-    section("Table 6: server scalability")
+    section("Table 6: server scalability (FIFO vs micro-batched)")
     from benchmarks import scalability
-    rows6 = scalability.run(n_max=128)
+    rows6, p95s6 = scalability.run(n_max=128)
     for name, n in rows6.items():
         csv.append((f"scalability/{name}", "max_clients", float(n)))
+    for n, (fifo_ms, batched_ms) in p95s6.items():
+        csv.append((f"scalability/n{n}", "fifo_p95_ms", fifo_ms))
+        csv.append((f"scalability/n{n}", "batched_p95_ms", batched_ms))
 
     section("Eq. 1: break-even bandwidth")
     from benchmarks import break_even

@@ -184,7 +184,8 @@ def _normalize_mode(use_kernel) -> str:
 
 
 def miniconv_apply(params, spec: MiniConvSpec, x, *,
-                   use_kernel=False, tile_h: int = 8, plan=None):
+                   use_kernel=False, tile_h: int = 8, plan=None,
+                   head=None, head_act: str = "relu"):
     """x: (B, H, W, C_in) float in [0,1] -> (B, H', W', K).
 
     Execution modes (``use_kernel``):
@@ -203,8 +204,19 @@ def miniconv_apply(params, spec: MiniConvSpec, x, *,
     ``plan`` lets callers that already compiled the PassPlan (e.g.
     ``core.split.make_miniconv_split``) reuse it instead of re-lowering
     per call; it must match the input's spatial size.
+
+    ``head`` (dense params dict ``{"kernel": (F, D)[, "bias": (D,)]}`` or a
+    ``(w, b)`` tuple) appends the server-side flatten + dense projection and
+    makes the return value ``(features, head_act(flat @ w + b))``.  In
+    ``"fused"`` mode the projection runs INSIDE the kernel as a per-tile
+    epilogue (see ``kernels.miniconv_pass.miniconv_encoder``); other modes
+    compute the same epilogue with XLA so training and deployment share one
+    call signature.
     """
     mode = _normalize_mode(use_kernel)
+    if head is not None:
+        hw, hb = ((head["kernel"], head.get("bias"))
+                  if isinstance(head, dict) else head)
     if mode == "fused":
         from repro.kernels.miniconv_pass import miniconv_encoder
         if plan is None:
@@ -215,6 +227,9 @@ def miniconv_apply(params, spec: MiniConvSpec, x, *,
                 f"{x.shape[1:3]}; rebuild with spec.plan(h, w)")
         ws = [params[f"layer{i}"]["kernel"] for i in range(len(spec.layers))]
         bs = [params[f"layer{i}"]["bias"] for i in range(len(spec.layers))]
+        if head is not None:
+            return miniconv_encoder(x, ws, bs, plan, tile_h=tile_h,
+                                    head_w=hw, head_b=hb, head_act=head_act)
         return miniconv_encoder(x, ws, bs, plan, tile_h=tile_h)
     if mode in ("per_pass", "grouped"):
         from repro.kernels.ops import miniconv_layer  # lazy: avoids cycles
@@ -226,6 +241,11 @@ def miniconv_apply(params, spec: MiniConvSpec, x, *,
             x = miniconv_layer(x, p["kernel"], p["bias"], stride=l.stride,
                                fused_groups=(mode == "grouped"))
         x = _ACTS[l.activation](x)
+    if head is not None:
+        z = x.reshape(x.shape[0], -1) @ hw
+        if hb is not None:
+            z = z + hb
+        return x, _ACTS[head_act](z)
     return x
 
 

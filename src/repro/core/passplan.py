@@ -166,6 +166,29 @@ class ShaderPass:
 
 
 @dataclasses.dataclass(frozen=True)
+class HeadPlan:
+    """The server-side linear projection fused into the encoder epilogue.
+
+    ``repro.kernels.miniconv_pass.miniconv_encoder`` executes this as a
+    per-tile matmul accumulated in VMEM (the ``head_w``/``head_b``
+    arguments); ``in_dim`` is the flattened feature count of the owning
+    :class:`PassPlan` and is validated against it at build time.
+    """
+
+    in_dim: int
+    out_dim: int
+    activation: str = "relu"
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.in_dim * self.out_dim
+
+    @property
+    def param_bytes(self) -> int:
+        return 4 * (self.in_dim + 1) * self.out_dim
+
+
+@dataclasses.dataclass(frozen=True)
 class PassPlan:
     """An ordered, budget-checked shader-pass schedule for one input size."""
 
@@ -203,8 +226,34 @@ class PassPlan:
         return self.out_h * self.out_w * self.k_out
 
     @property
+    def flat_features(self) -> int:
+        """Flattened feature count — the fused head's input width."""
+        return self.out_h * self.out_w * self.k_out
+
+    @property
     def flops_per_frame(self) -> int:
         return sum(p.flops for p in self.passes)
+
+    def head(self, out_dim: int, activation: str = "relu") -> HeadPlan:
+        """Plan the fused projection epilogue for this feature shape."""
+        if out_dim <= 0:
+            raise ValueError(f"head out_dim must be positive, got {out_dim}")
+        return HeadPlan(in_dim=self.flat_features, out_dim=out_dim,
+                        activation=activation)
+
+    def flops_per_batch(self, batch: int,
+                        head: Optional[HeadPlan] = None) -> int:
+        """FLOPs of one fused launch over a ``batch``-frame micro-batch."""
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        per_frame = self.flops_per_frame
+        if head is not None:
+            if head.in_dim != self.flat_features:
+                raise ValueError(
+                    f"head.in_dim {head.in_dim} != plan.flat_features "
+                    f"{self.flat_features}")
+            per_frame += head.flops
+        return batch * per_frame
 
     @property
     def max_pass_samples(self) -> int:
@@ -259,5 +308,6 @@ def build_pass_plan(spec: MiniConvSpec, h: int, w: Optional[int] = None, *,
     return plan
 
 
-__all__ = ["LayerPlan", "PassPlan", "ShaderPass", "build_pass_plan",
-           "count_passes", "out_size", "out_spatial_chain", "same_pads"]
+__all__ = ["HeadPlan", "LayerPlan", "PassPlan", "ShaderPass",
+           "build_pass_plan", "count_passes", "out_size",
+           "out_spatial_chain", "same_pads"]

@@ -52,12 +52,31 @@ class SplitModel:
         feats = self.codec.decode(payload)
         return self.server_apply(server_params, feats)
 
-    def wire_bytes(self, feature_shape: Optional[tuple] = None) -> int:
+    # ---- batched deployment path -------------------------------------------
+    def edge_step_batch(self, edge_params, obs_batch):
+        """Encode a stacked (B, ...) observation batch in ONE edge call.
+
+        The MiniConv edge executes the whole batch as a single fused
+        kernel launch (batch is the kernel's outer grid dimension) and the
+        codec quantises per example, so each request's payload is bitwise
+        the payload the single-frame path would have produced.
+        """
+        feats = self.edge_apply(edge_params, obs_batch)
+        return self.codec.encode_batch(feats)
+
+    def server_step_batch(self, server_params, payload_batch):
+        """Serve a stacked micro-batch payload (see ``wire.stack_payloads``)
+        with one decode + one server_apply over the leading batch axis."""
+        feats = self.codec.decode_batch(payload_batch)
+        return self.server_apply(server_params, feats)
+
+    def wire_bytes(self, feature_shape: Optional[tuple] = None, *,
+                   batch: int = 1) -> int:
         if feature_shape is None:
             if self.plan is None:
                 raise ValueError("feature_shape required for plan-less split")
             feature_shape = self.plan.feature_shape
-        return self.codec.wire_bytes(feature_shape)
+        return self.codec.wire_bytes_batch(feature_shape, batch)
 
     # ---- training path (single process, differentiable) --------------------
     def apply(self, params, obs):

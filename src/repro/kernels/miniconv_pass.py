@@ -31,6 +31,22 @@ execution tiers (see ``repro.core.passplan`` for the schedule itself):
    specs with c_out % 4 != 0 execute correctly; the wrapper slices the
    result back to the true channel count.
 
+   The batch dimension is the OUTER grid dimension, so a (B, H, W, C)
+   input is a single kernel launch: weight padding, dispatch, and the
+   interpreter setup are paid once for the whole micro-batch instead of
+   once per frame (the batched-serving path; see
+   ``repro.serving.server.BatchingPolicyServer``).
+
+   Optionally the server-side linear projection (the ``rl.networks``
+   flatten + dense head) is FUSED into the kernel epilogue: each tile's
+   activated rows are immediately contracted against the matching row
+   slice of the head weight and accumulated in a (1, D) VMEM scratch, so
+   the (B, D) projection leaves the kernel without the feature map ever
+   being re-read from HBM.  Head-weight rows beyond ``plan.out_h`` and
+   channels beyond ``plan.k_out`` are zero-padded, which cancels the
+   contributions of the over-allocated tile rows and RGBA padding
+   channels.
+
 Stride-2 passes subsample the input rows/cols, mirroring the shader's
 half-resolution render target.  On very large inputs the fused kernel keeps
 the full input image plus the last intermediate in VMEM (~a few MB at
@@ -231,21 +247,42 @@ def _conv_from_padded(xp, w, b, *, out_h: int, out_w: int, stride: int,
     return acc
 
 
-def _encoder_kernel(*refs, plan, tile_h: int, scratch_rows: int):
+def _encoder_kernel(*refs, plan, tile_h: int, scratch_rows: int,
+                    has_head: bool, head_act: str):
     """One (batch, out_row_tile) grid step of the fused encoder.
 
-    refs layout: x_ref, w_0..w_{L-1}, b_0..b_{L-1}, o_ref[, p_scr].
+    refs layout: x_ref, w_0..w_{L-1}, b_0..b_{L-1}[, hw_ref, hb_ref],
+    o_ref[, z_ref][, p_scr][, z_scr].
     ``p_scr`` (absent when L == 1) holds the SAME-padded input of the final
     layer for the current batch element: (scratch_rows, W_pad, C_in_pad)
     fp32, built once on the first tile step and reused by every tile.
+    With a fused head, ``hw_ref`` is the FULL (n_tiles, tile_h*W_out*
+    C_out_pad, D) tiled head weight, ``z_scr`` the (1, D) fp32 projection
+    accumulator and ``z_ref`` the (1, D) projection output block.
+
+    ``x_ref`` and ``hw_ref`` are whole-array blocks (constant index maps);
+    the kernel slices out the (batch, tile) pieces it needs with pl.ds.
+    Per-step sub-array BlockSpec fetches are pathologically slow in
+    interpret mode (~1 ms/MB, re-fetched every grid step) and the x block
+    is only consumed on the first tile step anyway; whole-array blocks
+    skip the copy entirely.  Compiled-TPU consequence: the whole
+    micro-batch input must fit VMEM (~1 MB at the serving scale B=8,
+    X=84; split the batch above ~X=256 at B=8).
     """
     layers = plan.layers
     L = len(layers)
+    n_in = 1 + 2 * L + (2 if has_head else 0)
     x_ref = refs[0]
     w_refs = refs[1:1 + L]
     b_refs = refs[1 + L:1 + 2 * L]
-    o_ref = refs[1 + 2 * L]
-    p_scr = refs[1 + 2 * L + 1] if L > 1 else None
+    if has_head:
+        hw_ref, hb_ref = refs[1 + 2 * L], refs[2 + 2 * L]
+    o_ref = refs[n_in]
+    z_ref = refs[n_in + 1] if has_head else None
+    scr = refs[n_in + (2 if has_head else 1):]
+    p_scr = scr[0] if L > 1 else None
+    z_scr = scr[-1] if has_head else None
+    b_i = pl.program_id(0)
     t = pl.program_id(1)
     last = layers[-1]
 
@@ -254,7 +291,7 @@ def _encoder_kernel(*refs, plan, tile_h: int, scratch_rows: int):
         def _chain_front_layers():
             # Layers 0..L-2 run once per batch element; intermediates stay
             # on-chip and the final layer's padded input is parked in VMEM.
-            y = x_ref[0].astype(jnp.float32)          # padded layer-0 input
+            y = x_ref[pl.ds(b_i, 1)][0].astype(jnp.float32)  # padded input
             for l in range(L - 1):
                 m = layers[l]
                 y = _conv_from_padded(
@@ -281,24 +318,80 @@ def _encoder_kernel(*refs, plan, tile_h: int, scratch_rows: int):
     if L > 1:
         xp = src_ref[pl.ds(row0, rows_need)]
     else:
-        xp = x_ref[0, pl.ds(row0, rows_need)].astype(jnp.float32)
+        xp = x_ref[pl.ds(b_i, 1),
+                   pl.ds(row0, rows_need)][0].astype(jnp.float32)
     acc = _conv_from_padded(
         xp, w_refs[-1][...].astype(jnp.float32),
         b_refs[-1][0].astype(jnp.float32),
         out_h=tile_h, out_w=last.out_w, stride=last.stride,
         kernel=last.kernel)
-    o_ref[0] = _ACTS[last.activation](acc).astype(o_ref.dtype)
+    y = _ACTS[last.activation](acc)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    if has_head:
+        # Fused projection epilogue: contract this tile's activated rows
+        # against the matching head-weight rows.  Zero-padded weight rows
+        # (beyond plan.out_h) and channels (beyond plan.k_out) null the
+        # over-allocated tile rows and RGBA padding.
+        @pl.when(t == 0)
+        def _z_init():
+            z_scr[...] = jnp.broadcast_to(
+                hb_ref[0].astype(jnp.float32), z_scr.shape)
+
+        z_scr[...] = z_scr[...] + (
+            y.reshape(1, -1) @ hw_ref[pl.ds(t, 1)][0].astype(jnp.float32))
+
+        @pl.when(t == pl.num_programs(1) - 1)
+        def _z_flush():
+            z_ref[0] = _ACTS[head_act](z_scr[...])[0].astype(z_ref.dtype)
+
+
+def _tile_head(head_w, plan, *, tile_h: int, n_tiles: int):
+    """Lay a (plan.flat_features, D) head weight out on the kernel's tiled
+    feature order: (n_tiles, tile_h*W_out*C_out_pad, D), zero rows beyond
+    plan.out_h / channels beyond plan.k_out (they cancel the final tile's
+    over-allocated rows and the RGBA padding)."""
+    last = plan.layers[-1]
+    flat = plan.out_h * plan.out_w * plan.k_out
+    assert head_w.shape[0] == flat, (head_w.shape, flat)
+    d_out = head_w.shape[1]
+    hw = head_w.reshape(plan.out_h, plan.out_w, plan.k_out, d_out)
+    hw_pad = jnp.zeros((n_tiles * tile_h, last.out_w, last.c_out_pad,
+                        d_out), head_w.dtype)
+    hw_pad = jax.lax.dynamic_update_slice(hw_pad, hw, (0, 0, 0, 0))
+    return hw_pad.reshape(n_tiles, tile_h * last.out_w * last.c_out_pad,
+                          d_out)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "tile_h"))
+def prepare_fused_head(head_w, plan, *, tile_h: int = 8):
+    """Pre-tile a (plan.flat_features, D) head weight for the fused-head
+    epilogue.  :func:`miniconv_encoder` tiles a 2-D ``head_w`` per call
+    (inside the launch, a multi-MB zeros+copy); hot serving paths should
+    call this ONCE per head and pass the 3-D result instead."""
+    tile_h = max(1, min(tile_h, plan.out_h))
+    n_tiles = -(-plan.out_h // tile_h)
+    return _tile_head(head_w, plan, tile_h=tile_h, n_tiles=n_tiles)
 
 
 def miniconv_encoder(x, weights, biases, plan, *, tile_h: int = 8,
+                     head_w=None, head_b=None, head_act: str = "relu",
                      interpret=None):
     """Execute a whole :class:`~repro.core.passplan.PassPlan` as ONE kernel.
 
-    x: (B, H, W, C_in) with (H, W) == (plan.in_h, plan.in_w);
+    x: (B, H, W, C_in) with (H, W) == (plan.in_h, plan.in_w); batch is the
+    outer grid dimension, so a micro-batch of frames is a single launch.
     weights/biases: per-layer lists matching ``plan.spec.layers``.
     Returns (B, plan.out_h, plan.out_w, plan.k_out) in x.dtype — bitwise
     semantics match the per-pass path (SAME padding, fp32 accumulation,
     per-layer activation) within float tolerance.
+
+    ``head_w`` ((plan.flat_features, D), optional) fuses the server-side
+    linear projection into the kernel epilogue: the return value becomes
+    ``(features, head_act(features.reshape(B, -1) @ head_w + head_b))``
+    with the (B, D) projection accumulated tile-by-tile inside the kernel.
+    A 3-D ``head_w`` is taken as already tiled by :func:`prepare_fused_head`
+    (with the SAME ``tile_h``), skipping the per-call tiling copy.
     """
     # resolve the env-dependent default OUTSIDE the jit cache so flipping
     # REPRO_PALLAS_COMPILE between calls is honoured
@@ -306,18 +399,21 @@ def miniconv_encoder(x, weights, biases, plan, *, tile_h: int = 8,
         interpret = (not os.environ.get("REPRO_PALLAS_COMPILE")
                      and jax.default_backend() != "tpu")
     return _miniconv_encoder(x, weights, biases, plan, tile_h=tile_h,
-                             interpret=interpret)
+                             head_w=head_w, head_b=head_b,
+                             head_act=head_act, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "tile_h", "interpret"))
+@functools.partial(jax.jit, static_argnames=("plan", "tile_h", "head_act",
+                                             "interpret"))
 def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
-                      interpret: bool):
+                      head_w, head_b, head_act: str, interpret: bool):
     layers = plan.layers
     L = len(layers)
     B, h, w_sz, c_in = x.shape
     assert (h, w_sz) == (plan.in_h, plan.in_w), (x.shape, plan.in_h,
                                                  plan.in_w)
     assert c_in == layers[0].c_in and len(weights) == L == len(biases)
+    has_head = head_w is not None
 
     tile_h = max(1, min(tile_h, plan.out_h))
     n_tiles = -(-plan.out_h // tile_h)
@@ -344,8 +440,11 @@ def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
         ws.append(wp)
         bs.append(bp)
 
-    in_specs = [pl.BlockSpec((1, x0_rows, first.padded_in_w, first.c_in_pad),
-                             lambda b_, t: (b_, 0, 0, 0))]
+    # Whole-array block (constant index map): the kernel slices out the
+    # batch element itself — see the interpret-mode fetch note in
+    # _encoder_kernel's docstring.
+    in_specs = [pl.BlockSpec((B, x0_rows, first.padded_in_w, first.c_in_pad),
+                             lambda b_, t: (0, 0, 0, 0))]
     for l in range(L):
         m = layers[l]
         in_specs.append(pl.BlockSpec(
@@ -355,26 +454,54 @@ def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
         m = layers[l]
         in_specs.append(pl.BlockSpec((1, m.c_out_pad),
                                      lambda b_, t: (0, 0)))
+
+    args = [xp, *ws, *bs]
+    out_specs = [pl.BlockSpec((1, tile_h, last.out_w, last.c_out_pad),
+                              lambda b_, t: (b_, t, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct(
+        (B, n_tiles * tile_h, last.out_w, last.c_out_pad), x.dtype)]
+    if has_head:
+        tile_flat = tile_h * last.out_w * last.c_out_pad
+        if head_w.ndim == 3:              # pre-tiled by prepare_fused_head
+            assert head_w.shape[:2] == (n_tiles, tile_flat), \
+                (head_w.shape, n_tiles, tile_flat)
+            hw_pad = head_w
+        else:
+            hw_pad = _tile_head(head_w, plan, tile_h=tile_h,
+                                n_tiles=n_tiles)
+        d_out = hw_pad.shape[-1]
+        hb = (jnp.zeros((d_out,), hw_pad.dtype) if head_b is None
+              else head_b).reshape(1, d_out)
+        in_specs.append(pl.BlockSpec((n_tiles, tile_flat, d_out),
+                                     lambda b_, t: (0, 0, 0)))
+        in_specs.append(pl.BlockSpec((1, d_out), lambda b_, t: (0, 0)))
+        args += [hw_pad, hb]
+        out_specs.append(pl.BlockSpec((1, d_out), lambda b_, t: (b_, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, d_out), x.dtype))
+
     scratch_shapes = []
     if L > 1:
         scratch_shapes.append(pltpu.VMEM(
             (scratch_rows, last.padded_in_w, last.c_in_pad), jnp.float32))
+    if has_head:
+        scratch_shapes.append(pltpu.VMEM((1, head_w.shape[-1]), jnp.float32))
 
     out = pl.pallas_call(
         functools.partial(_encoder_kernel, plan=plan, tile_h=tile_h,
-                          scratch_rows=scratch_rows),
+                          scratch_rows=scratch_rows, has_head=has_head,
+                          head_act=head_act),
         grid=(B, n_tiles),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, tile_h, last.out_w, last.c_out_pad),
-                               lambda b_, t: (b_, t, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct(
-            (B, n_tiles * tile_h, last.out_w, last.c_out_pad), x.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=scratch_shapes,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(xp, *ws, *bs)
-    return out[:, :plan.out_h, :, :plan.k_out]
+    )(*args)
+    feats = out[0][:, :plan.out_h, :, :plan.k_out]
+    return (feats, out[1]) if has_head else feats
 
 
-__all__ = ["miniconv_pass", "miniconv_layer_grouped", "miniconv_encoder"]
+__all__ = ["miniconv_pass", "miniconv_layer_grouped", "miniconv_encoder",
+           "prepare_fused_head"]

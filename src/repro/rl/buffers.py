@@ -38,12 +38,26 @@ class ReplayBuffer:
         if not self.full and self.idx == 0:
             self.full = True
 
-    def sample(self, batch: int):
+    def sample(self, batch: int, *, encode_fn=None):
+        """Draw a minibatch; optionally encode observations in ONE call.
+
+        ``encode_fn`` (e.g. the fused batched MiniConv encoder) is applied
+        to obs and next_obs stacked into a single (2*batch, ...) array, so
+        the whole minibatch costs one kernel launch instead of 2*batch
+        per-frame launches; the features come back under ``obs_feats`` /
+        ``next_obs_feats`` alongside the raw pixels.
+        """
         idxs = self.rng.integers(0, len(self), size=batch)
-        return {
+        out = {
             "obs": self.obs[idxs].astype(np.float32) / 255.0,
             "next_obs": self.next_obs[idxs].astype(np.float32) / 255.0,
             "actions": self.actions[idxs],
             "rewards": self.rewards[idxs],
             "dones": self.dones[idxs],
         }
+        if encode_fn is not None:
+            stacked = np.concatenate([out["obs"], out["next_obs"]])
+            feats = np.asarray(encode_fn(stacked))
+            out["obs_feats"], out["next_obs_feats"] = \
+                feats[:batch], feats[batch:]
+        return out

@@ -100,12 +100,17 @@ class Encoder:
         return None if self.spec is None else self.spec.plan(h, w)
 
 
-def make_encoder(name: str, c_in: int = 9, *, use_kernel=False) -> Encoder:
+def make_encoder(name: str, c_in: int = 9, *, use_kernel=False,
+                 fused_head: bool = False) -> Encoder:
     """name in {"full_cnn", "miniconv4", "miniconv16"}.
 
     ``use_kernel`` selects the MiniConv execution tier (False = XLA for
     training; "fused" runs the whole pass plan as one Pallas kernel for
-    deployment-path benchmarks).
+    deployment-path benchmarks).  ``fused_head`` routes the flatten +
+    dense(512) projection through the encoder's fused-head epilogue — with
+    ``use_kernel="fused"`` the conv stack AND the projection execute as ONE
+    Pallas kernel (batched: the leading obs dim is the kernel's outer grid
+    dimension), which is the batched-serving/replay-encoding hot path.
     """
     if name == "full_cnn":
         return Encoder("full_cnn",
@@ -115,10 +120,17 @@ def make_encoder(name: str, c_in: int = 9, *, use_kernel=False) -> Encoder:
         k = int(name.replace("miniconv", ""))
         spec = standard_spec(c_in=c_in, k=k)
 
-        def apply(params, obs):
-            feats = miniconv_edge_apply(params["edge"], spec, obs,
-                                        use_kernel=use_kernel)
-            return miniconv_server_apply(params["server"], feats)
+        if fused_head:
+            def apply(params, obs):
+                _, z = miniconv_apply(params["edge"], spec, obs,
+                                      use_kernel=use_kernel,
+                                      head=params["server"]["proj"])
+                return z
+        else:
+            def apply(params, obs):
+                feats = miniconv_edge_apply(params["edge"], spec, obs,
+                                            use_kernel=use_kernel)
+                return miniconv_server_apply(params["server"], feats)
 
         return Encoder(name,
                        lambda key: miniconv_encoder_init(key, spec),

@@ -1,6 +1,37 @@
+"""Serving: the deployed half of the split-policy system.
+
+Module map
+----------
+``netsim``
+    Deterministic bandwidth-shaped link (the ``tc netem`` stand-in):
+    :class:`ShapedLink` serialises transfers FIFO with finite bandwidth,
+    propagation delay and optional deterministic jitter.
+``client``
+    On-device half: :class:`EdgeClient` (encoder + wire codec, single and
+    batched measurement) and :class:`DecisionLoop` (the paper's Figure-5
+    obs -> action pipeline for one client).
+``server``
+    Remote half: :class:`PolicyServer` (one request per call, the paper's
+    FIFO baseline) and :class:`BatchingPolicyServer` (micro-batching: up
+    to ``max_batch`` queued requests served by ONE batched call; measures
+    the t(B) service curve interpolated by :class:`BatchServiceModel`).
+    Queueing simulators reproduce Table 6: :class:`QueueSim` (strict
+    FIFO) and :class:`BatchQueueSim` (batch-aware — launches whatever has
+    arrived when the server frees up, optionally holding ``max_wait_s``
+    for the batch to fill).
+
+The batched request path end-to-end: each client encodes ONE frame
+(``repro.core.split.SplitModel.edge_step``), payloads are stacked with
+``repro.core.wire.stack_payloads`` (per-request quantisation headers
+survive stacking), and the server decodes + projects the whole
+micro-batch in one call (``SplitModel.server_step_batch`` /
+``benchmarks.decision_latency.build``'s ``split_server_batch_fn``).
+"""
 from repro.serving.netsim import ShapedLink, LinkTrace
-from repro.serving.server import PolicyServer, QueueSim
+from repro.serving.server import (BatchingPolicyServer, BatchQueueSim,
+                                  BatchServiceModel, PolicyServer, QueueSim)
 from repro.serving.client import EdgeClient, DecisionLoop
 
-__all__ = ["ShapedLink", "LinkTrace", "PolicyServer", "QueueSim",
-           "EdgeClient", "DecisionLoop"]
+__all__ = ["ShapedLink", "LinkTrace", "PolicyServer", "BatchingPolicyServer",
+           "BatchServiceModel", "BatchQueueSim", "QueueSim", "EdgeClient",
+           "DecisionLoop"]

@@ -6,6 +6,13 @@ client, link, and server into the paper's Figure-5 pipeline and measures
 decision latency (observation available -> action received), either with
 measured host wall-clock for the compute stages or with supplied stage
 times.
+
+Batched serving: each client still encodes and transmits ONE frame per
+decision — micro-batching happens server-side across clients
+(``repro.serving.server.BatchingPolicyServer``).  The batched encode path
+(``EdgeClient.measure_batch``) is the trainer-side use of the same fused
+kernel: replay minibatches run through one (B, H, W, C) launch instead of
+B per-frame launches (see ``repro.rl.buffers.ReplayBuffer.sample``).
 """
 from __future__ import annotations
 
@@ -35,6 +42,25 @@ class EdgeClient:
         _block(out)
         self.encode_time_s = (time.perf_counter() - t0) / iters
         return self.encode_time_s
+
+    def measure_batch(self, example_obs, *, batch: int = 8,
+                      iters: int = 10) -> float:
+        """Per-frame encode time when ``batch`` frames share one launch.
+
+        ``example_obs`` is a single (1, H, W, C) observation; it is tiled
+        along the leading axis, which the fused MiniConv kernel consumes as
+        its outer grid dimension.  Returns seconds PER FRAME so the value
+        is directly comparable to :meth:`measure`.
+        """
+        import jax.numpy as jnp
+        obs = jnp.broadcast_to(example_obs[:1],
+                               (batch,) + tuple(example_obs.shape[1:]))
+        self.encode_fn(obs)  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = self.encode_fn(obs)
+        _block(out)
+        return (time.perf_counter() - t0) / (iters * batch)
 
 
 @dataclasses.dataclass

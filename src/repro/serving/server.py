@@ -1,9 +1,19 @@
 """Server-side policy execution + multi-client queueing simulation.
 
 ``PolicyServer`` wraps a jitted server-half function and measures its
-service time on this host.  ``QueueSim`` reproduces the paper's Table 6
-setting: N clients at a fixed decision rate against one FIFO server,
-reporting p95 decision latency (queueing + service + transfer).
+service time on this host.  ``BatchingPolicyServer`` is its micro-batching
+replacement: it forms micro-batches (up to ``max_batch`` requests, waiting
+at most ``max_wait_s`` for the batch to fill) and serves them with ONE
+batched call, measuring the service-time curve t(B) that
+:class:`BatchServiceModel` interpolates.
+
+``QueueSim`` reproduces the paper's Table 6 setting: N clients at a fixed
+decision rate against one FIFO server, reporting p95 decision latency
+(queueing + service + transfer).  ``BatchQueueSim`` extends it with
+micro-batching semantics: when the server frees up it launches whatever
+has arrived (capped at ``max_batch``), optionally holding the batch open
+``max_wait_s`` for stragglers, and charges the whole batch the batched
+service time t(B) instead of B sequential services.
 """
 from __future__ import annotations
 
@@ -36,9 +46,91 @@ class PolicyServer:
 def _block(x):
     try:
         import jax
-        jax.block_until_ready(x)
-    except Exception:
-        pass
+    except ImportError:
+        return
+    jax.block_until_ready(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchServiceModel:
+    """Measured batched service-time curve t(B), piecewise-linear.
+
+    ``points`` are (batch_size, seconds) samples sorted by batch size;
+    queries between samples interpolate, queries past the largest sample
+    extrapolate with the marginal per-request cost of the last segment
+    (the asymptotic regime where fixed launch overhead is amortised).
+    """
+
+    points: tuple[tuple[int, float], ...]
+
+    def __post_init__(self):
+        if not self.points:
+            raise ValueError("BatchServiceModel needs >= 1 measured point")
+        bs = [b for b, _ in self.points]
+        if bs != sorted(set(bs)):
+            raise ValueError(f"points must be sorted/unique in batch: {bs}")
+
+    def __call__(self, batch: int) -> float:
+        bs = np.array([b for b, _ in self.points], float)
+        ts = np.array([t for _, t in self.points], float)
+        if batch <= bs[-1]:
+            return float(np.interp(batch, bs, ts))
+        if len(bs) > 1:
+            slope = (ts[-1] - ts[-2]) / (bs[-1] - bs[-2])
+        else:
+            slope = ts[-1] / bs[-1]
+        return float(ts[-1] + slope * (batch - bs[-1]))
+
+
+@dataclasses.dataclass
+class BatchingPolicyServer:
+    """Micro-batching policy server.
+
+    ``serve_batch_fn`` maps a stacked micro-batch payload (every tensor
+    gains a leading batch axis; see ``repro.core.wire.stack_payloads``) to
+    stacked actions.  ``measure`` times it across batch sizes, yielding the
+    t(B) curve that drives :class:`BatchQueueSim`; ``max_batch`` /
+    ``max_wait_s`` are the batching policy the simulator reproduces.
+    """
+
+    serve_batch_fn: Callable
+    max_batch: int = 8
+    max_wait_s: float = 0.0
+    service_times_s: Optional[dict[int, float]] = None
+
+    def serve(self, payloads: Sequence) -> list:
+        """Serve queued single-request payloads as ONE batched call."""
+        from repro.core.wire import stack_payloads  # lazy: jax-optional
+        if len(payloads) > self.max_batch:
+            raise ValueError(f"{len(payloads)} requests > max_batch "
+                             f"{self.max_batch}")
+        out = self.serve_batch_fn(stack_payloads(payloads))
+        return [out[i] for i in range(len(payloads))]
+
+    def measure(self, example_payload, *,
+                batch_sizes: Sequence[int] = (1, 2, 4, 8),
+                iters: int = 10) -> dict[int, float]:
+        """Measure t(B) on this host for each micro-batch size."""
+        import jax
+        import jax.numpy as jnp
+        times: dict[int, float] = {}
+        for b in sorted(set(batch_sizes)):
+            batch = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (b,) + a.shape),
+                example_payload)
+            self.serve_batch_fn(batch)  # compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = self.serve_batch_fn(batch)
+            _block(out)
+            times[b] = (time.perf_counter() - t0) / iters
+        self.service_times_s = times
+        return times
+
+    def service_model(self) -> BatchServiceModel:
+        if not self.service_times_s:
+            raise ValueError("call measure() first")
+        return BatchServiceModel(tuple(sorted(self.service_times_s.items())))
 
 
 @dataclasses.dataclass
@@ -57,7 +149,12 @@ class QueueSim:
     rate_hz: float = 10.0
     horizon_s: float = 10.0
 
-    def latencies(self, n_clients: int) -> np.ndarray:
+    def _request_arrivals(self, n_clients: int) -> list[tuple[float, float]]:
+        """(t_obs, server_arrival) per request, in observation order.
+
+        The uplink serialises transfers FIFO, so arrivals are
+        non-decreasing in this order.
+        """
         self.uplink.reset()
         period = 1.0 / self.rate_hz
         events = []          # (obs_time, client)
@@ -67,18 +164,23 @@ class QueueSim:
                 events.append((t, c))
                 t += period
         events.sort()
+        return [(t_obs, self.uplink.send(t_obs, self.payload_bytes).arrival)
+                for t_obs, _ in events]
+
+    def _return_time(self, done: float) -> float:
+        # action return: small payload, same link model (downlink assumed
+        # symmetric and uncongested)
+        return done + self.uplink.tx_time(self.action_bytes) \
+            + self.uplink.propagation_s
+
+    def latencies(self, n_clients: int) -> np.ndarray:
         server_free = 0.0
         lat = []
-        for t_obs, _ in events:
-            tr = self.uplink.send(t_obs, self.payload_bytes)
-            start = max(tr.arrival, server_free)
+        for t_obs, arrival in self._request_arrivals(n_clients):
+            start = max(arrival, server_free)
             done = start + self.service_time_s
             server_free = done
-            # action return: small payload, same link model (downlink
-            # assumed symmetric and uncongested)
-            t_recv = done + self.uplink.tx_time(self.action_bytes) \
-                + self.uplink.propagation_s
-            lat.append(t_recv - t_obs)
+            lat.append(self._return_time(done) - t_obs)
         return np.asarray(lat)
 
     def p95(self, n_clients: int) -> float:
@@ -93,3 +195,54 @@ class QueueSim:
             elif best:       # monotone beyond saturation
                 break
         return best
+
+
+@dataclasses.dataclass
+class BatchQueueSim(QueueSim):
+    """Micro-batching server against the same client population.
+
+    When the server frees up it launches a batch: all requests that have
+    arrived (up to ``max_batch``), after optionally holding the launch up
+    to ``max_wait_s`` for the batch to fill.  The whole batch occupies the
+    server for ``service_model(B)`` (falling back to the batch-invariant
+    ``service_time_s`` when no model is given) and every member's action
+    returns at batch completion.  With ``max_batch=1``/``max_wait_s=0``
+    this reduces exactly to the FIFO :class:`QueueSim`.
+    """
+
+    max_batch: int = 8
+    max_wait_s: float = 0.0
+    service_model: Optional[Callable[[int], float]] = None
+
+    def service(self, batch: int) -> float:
+        if self.service_model is not None:
+            return self.service_model(batch)
+        return self.service_time_s
+
+    def latencies(self, n_clients: int) -> np.ndarray:
+        arr = self._request_arrivals(n_clients)
+        n = len(arr)
+        server_free = 0.0
+        lat = np.empty(n)
+        i = 0
+        while i < n:
+            ready = max(server_free, arr[i][1])
+            j_fill = i + self.max_batch - 1
+            if j_fill < n and arr[j_fill][1] <= ready:
+                launch = ready           # batch already full when server free
+            elif self.max_wait_s > 0.0:
+                deadline = ready + self.max_wait_s
+                fill = arr[j_fill][1] if j_fill < n else np.inf
+                launch = max(ready, min(deadline, fill))
+            else:
+                launch = ready           # greedy: take what's there
+            k = i
+            while k < n and k - i < self.max_batch and arr[k][1] <= launch:
+                k += 1
+            done = launch + self.service(k - i)
+            t_recv = self._return_time(done)
+            for m in range(i, k):
+                lat[m] = t_recv - arr[m][0]
+            server_free = done
+            i = k
+        return lat

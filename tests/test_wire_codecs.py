@@ -1,0 +1,110 @@
+"""Property tests for every wire codec (hypothesis).
+
+Two families of guarantees, for ALL registered codecs:
+
+* decode(encode(x)) stays within the codec's analytic quantisation error
+  bound (float32 exact, bf16 relative, uint8/int8 half-step absolute);
+* ``wire_bytes(shape)`` EXACTLY equals the byte size of the real encoded
+  payload (data + quantisation headers) — the latency model and the
+  roofline accounting bill the link with this number, so it must not
+  drift from what ``encode`` actually emits.  The ``Int8ChannelCodec``
+  override (per-channel scale header) was previously untested.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.wire import CODECS, get_codec, roundtrip
+
+SHAPES = st.lists(st.integers(1, 6), min_size=1, max_size=4).map(tuple)
+
+
+def _array(shape, seed, loc, scale):
+    x = loc + scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+    return x.astype(jnp.float32)
+
+
+def _payload_nbytes(payload) -> int:
+    return sum(np.asarray(v).nbytes for v in payload.values())
+
+
+@given(st.sampled_from(sorted(CODECS)), SHAPES, st.integers(0, 2 ** 16),
+       st.floats(-100, 100), st.floats(0.01, 50))
+@settings(max_examples=80, deadline=None)
+def test_wire_bytes_equals_real_payload_size(name, shape, seed, loc, scale):
+    codec = get_codec(name)
+    payload = codec.encode(_array(shape, seed, loc, scale))
+    assert codec.wire_bytes(shape) == _payload_nbytes(payload), \
+        (name, shape, {k: (v.shape, v.dtype) for k, v in payload.items()})
+
+
+@given(SHAPES, st.integers(0, 2 ** 16), st.floats(-100, 100),
+       st.floats(0.01, 50))
+@settings(max_examples=60, deadline=None)
+def test_uint8_roundtrip_half_step_bound(shape, seed, loc, scale):
+    x = _array(shape, seed, loc, scale)
+    y = roundtrip(get_codec("uint8"), x)
+    step = max(float(x.max() - x.min()), 1e-8) / 255.0
+    assert float(jnp.abs(y - x).max()) <= step / 2 + 1e-5 * max(abs(loc), 1)
+
+
+@given(SHAPES, st.integers(0, 2 ** 16), st.floats(-100, 100),
+       st.floats(0.01, 50))
+@settings(max_examples=60, deadline=None)
+def test_int8_channel_roundtrip_per_channel_bound(shape, seed, loc, scale):
+    x = _array(shape, seed, loc, scale)
+    y = roundtrip(get_codec("int8_channel"), x)
+    axes = tuple(range(x.ndim - 1))
+    ch_scale = np.maximum(np.asarray(jnp.max(jnp.abs(x), axis=axes)),
+                          1e-8) / 127.0
+    err = np.asarray(jnp.abs(y - x)).max(axis=axes) if x.ndim > 1 \
+        else np.asarray(jnp.abs(y - x))
+    assert np.all(err <= ch_scale / 2 + 1e-5 * np.maximum(ch_scale, 1))
+
+
+@given(SHAPES, st.integers(0, 2 ** 16), st.floats(-100, 100),
+       st.floats(0.01, 50))
+@settings(max_examples=40, deadline=None)
+def test_float32_exact_bf16_relative(shape, seed, loc, scale):
+    x = _array(shape, seed, loc, scale)
+    assert float(jnp.abs(roundtrip(get_codec("float32"), x) - x).max()) == 0
+    y = roundtrip(get_codec("bf16"), x)
+    # bf16: 8 mantissa bits -> relative error <= 2^-8 of magnitude
+    bound = 2.0 ** -8 * np.maximum(np.abs(np.asarray(x)), 1e-30)
+    assert np.all(np.abs(np.asarray(y - x)) <= bound + 1e-30)
+
+
+@given(st.sampled_from(sorted(CODECS)), st.integers(1, 6),
+       st.integers(0, 2 ** 16))
+@settings(max_examples=40, deadline=None)
+def test_encode_batch_matches_per_example_encode(name, batch, seed):
+    """Batched encoding must keep PER-EXAMPLE quantisation: each member's
+    payload equals what the single-frame path produces, and the batched
+    wire accounting equals batch * wire_bytes."""
+    codec = get_codec(name)
+    # per-example dynamic ranges differ by orders of magnitude
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (batch, 3, 3, 4))
+    x = x * (10.0 ** jnp.arange(batch)).reshape(batch, 1, 1, 1)
+    bp = codec.encode_batch(x)
+    assert _payload_nbytes(bp) == codec.wire_bytes_batch(x.shape[1:], batch)
+    for i in range(batch):
+        single = codec.encode(x[i])
+        for k in single:
+            np.testing.assert_allclose(np.asarray(bp[k][i]),
+                                       np.asarray(single[k]), rtol=1e-6)
+    # decode_batch round-trips to the per-example roundtrip
+    y = codec.decode_batch(bp)
+    singles = jnp.stack([roundtrip(codec, x[i]) for i in range(batch)])
+    np.testing.assert_allclose(y, singles, rtol=1e-5, atol=1e-6)
+
+
+def test_wire_bytes_batch_is_linear():
+    for name, codec in CODECS.items():
+        one = codec.wire_bytes((7, 5, 4))
+        assert codec.wire_bytes_batch((7, 5, 4), 8) == 8 * one, name
