@@ -6,6 +6,12 @@ vs split-policy (MiniConv on-device, K=4 uint8 features transmitted).
 Compute-stage times are measured on this host with the real jitted
 networks; the link is the deterministic token-bucket shaper.
 
+The whole split pipeline — encoder, plan, codec, serving halves, payload
+accounting — is constructed from ONE declarative
+:class:`repro.deploy.DeploymentConfig` via ``Deployment.build``
+(``--manifest`` loads that config from a serialised JSON manifest
+instead, the same file ``python -m repro.deploy`` writes).
+
 ``--clients N`` additionally reports p95 decision latency for N clients
 sharing one split-policy server, FIFO vs micro-batching (the batch-aware
 queue simulation fed by the measured batched service-time curve).
@@ -14,15 +20,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.miniconv import (miniconv_feature_shape, standard_spec)
-from repro.core.wire import frame_bytes_rgba, get_codec
-from repro.rl.networks import (full_cnn_apply, full_cnn_init,
-                               miniconv_edge_apply, miniconv_encoder_init,
-                               miniconv_server_apply, mlp_apply, mlp_init)
+from repro.deploy import Deployment, DeploymentConfig
+from repro.rl.networks import full_cnn_apply, full_cnn_init, mlp_apply, mlp_init
 from repro.serving.client import DecisionLoop, EdgeClient
 from repro.serving.netsim import shaped
 from repro.serving.server import (BatchingPolicyServer, BatchQueueSim,
@@ -34,8 +37,14 @@ C_IN = 12             # RGBA x 3 stacked frames at the upload boundary
 
 @dataclasses.dataclass(frozen=True)
 class ServingSetup:
-    """Jitted halves + payload accounting shared by the serving benchmarks."""
+    """Jitted halves + payload accounting shared by the serving benchmarks.
 
+    Everything here is RESOLVED from ``deployment`` (one
+    ``Deployment.build``); the fields are kept flat because the latency
+    and scalability loops consume them directly.
+    """
+
+    deployment: Deployment
     edge_fn: object               # obs -> single-request payload
     split_server_fn: object       # payload -> action
     split_server_batch_fn: object  # stacked micro-batch payload -> actions
@@ -45,47 +54,44 @@ class ServingSetup:
     frame_bytes: int
 
 
-def build(*, k: int = 4, seed: int = 0) -> ServingSetup:
+def standard_config(*, k: int = 4, backend: str = "xla",
+                    max_batch: int = 8) -> DeploymentConfig:
+    """The benchmark's canonical deployment: the paper's K-channel encoder
+    at task scale.  ``xla`` is the timing-portable default on this host;
+    pass ``backend="fused"`` (or a manifest) for the kernel path."""
+    return DeploymentConfig.standard(k=k, c_in=C_IN, h=X_SIZE,
+                                     backend=backend, max_batch=max_batch)
+
+
+def build(*, k: int = 4, seed: int = 0,
+          config: DeploymentConfig | None = None) -> ServingSetup:
+    cfg = config or standard_config(k=k)
+    dep = Deployment.build(cfg)
+    c_in = cfg.spec.layers[0].c_in      # manifests may deviate from C_IN
     key = jax.random.PRNGKey(seed)
-    spec = standard_spec(c_in=C_IN, k=k)
-    enc = miniconv_encoder_init(key, spec, h=X_SIZE, w=X_SIZE)
-    cnn = full_cnn_init(key, C_IN, h=X_SIZE, w=X_SIZE)
-    head = mlp_init(key, [512, 256, 3])
-    codec = get_codec("uint8")
-    fh, fw, fc = miniconv_feature_shape(spec, X_SIZE, X_SIZE)
+    params = dep.init(key)
+    cnn = full_cnn_init(key, c_in, h=cfg.in_h, w=cfg.in_w)
+    head = mlp_init(key, [cfg.head_dim, 256, 3])
 
-    @jax.jit
-    def edge_fn(obs):
-        return codec.encode(miniconv_edge_apply(enc["edge"], spec, obs))
-
-    @jax.jit
-    def split_server_fn(payload):
-        feats = codec.decode(payload)
-        z = miniconv_server_apply(enc["server"], feats)
+    def head_fn(z):
         return mlp_apply(head, z)
 
-    @jax.jit
-    def split_server_batch_fn(payload_batch):
-        # one decode + one projection + one head over the whole micro-batch
-        # (each request keeps its own quantisation header)
-        feats = codec.decode_batch(payload_batch)
-        z = miniconv_server_apply(enc["server"], feats)
-        return mlp_apply(head, z)
+    edge_fn = dep.edge_fn(params)
+    split_server_fn = dep.server_fn(params, head=head_fn)
+    split_server_batch_fn = dep.server_batch_fn(params, head=head_fn)
 
     @jax.jit
     def mono_server_fn(obs):
         return mlp_apply(head, full_cnn_apply(cnn, obs))
 
-    obs = jax.random.uniform(key, (1, X_SIZE, X_SIZE, C_IN))
-    wire_bytes = codec.wire_bytes((1, fh, fw, fc))
-    frame_bytes = frame_bytes_rgba(X_SIZE) * 3      # 3 stacked RGBA frames
-    return ServingSetup(edge_fn, split_server_fn, split_server_batch_fn,
-                        mono_server_fn, obs, wire_bytes, frame_bytes)
+    obs = jax.random.uniform(key, (1, cfg.in_h, cfg.in_w, c_in))
+    return ServingSetup(dep, edge_fn, split_server_fn, split_server_batch_fn,
+                        mono_server_fn, obs, dep.wire_bytes, dep.frame_bytes)
 
 
 def run(bandwidths=(10, 25, 50, 100), *, n_decisions: int = 1000,
-        k: int = 4):
-    setup = build(k=k)
+        k: int = 4, config: DeploymentConfig | None = None):
+    setup = build(k=k, config=config)
     wire_bytes, frame_bytes = setup.wire_bytes, setup.frame_bytes
     client = EdgeClient(encode_fn=setup.edge_fn, wire_bytes=wire_bytes)
     j = client.measure(setup.obs)
@@ -118,7 +124,9 @@ def measure_service_curve(setup: ServingSetup, *, max_batch: int = 8,
 
     Shared by this benchmark and ``benchmarks.scalability`` so the two
     FIFO-vs-batched reports can never drift apart in how they sample the
-    curve.  Returns ({batch: seconds}, BatchServiceModel).
+    curve.  The server comes from the deployment's own batching policy
+    (``Deployment.server``), overridden by the sweep arguments.
+    Returns ({batch: seconds}, BatchServiceModel).
     """
     payload = setup.edge_fn(setup.obs)
     bsrv = BatchingPolicyServer(serve_batch_fn=setup.split_server_batch_fn,
@@ -160,21 +168,32 @@ def run_queue(*, n_clients: int = 8, mbps: float = 100.0, k: int = 4,
     return row
 
 
+def load_manifest(path: str) -> DeploymentConfig:
+    """Load a serialised DeploymentConfig (``python -m repro.deploy``)."""
+    with open(path) as f:
+        return DeploymentConfig.from_dict(json.load(f))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bandwidths", default="10,25,50,100")
     ap.add_argument("--decisions", type=int, default=1000)
     ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--manifest", default=None,
+                    help="deployment manifest JSON to build the pipeline "
+                         "from (overrides --k)")
     ap.add_argument("--clients", type=int, default=8,
                     help="N clients for the FIFO-vs-batched p95 report "
                          "(0 disables)")
     ap.add_argument("--max-batch", type=int, default=8)
     args = ap.parse_args(argv)
+    config = load_manifest(args.manifest) if args.manifest else None
     run(tuple(float(b) for b in args.bandwidths.split(",")),
-        n_decisions=args.decisions, k=args.k)
+        n_decisions=args.decisions, k=args.k, config=config)
     if args.clients:
         run_queue(n_clients=args.clients, k=args.k,
-                  max_batch=args.max_batch)
+                  max_batch=args.max_batch,
+                  setup=build(k=args.k, config=config))
 
 
 if __name__ == "__main__":

@@ -1,12 +1,16 @@
 """Paper Figure 2: per-frame encoder processing time vs input size.
 
 Mean of N consecutive inferences with standard deviation, swept over
-input sizes.  Execution paths stand in for the paper's device matrix:
+input sizes.  Execution paths stand in for the paper's device matrix and
+are selected declaratively: each (size, backend) cell is ONE
+:class:`repro.deploy.DeploymentConfig` resolved by ``Deployment.build``
+(the execution-backend registry in ``repro.core.backends``):
 
 * ``xla``      — jit / XLA convs (the embedded-GPU shader analogue);
 * ``fused``    — the whole PassPlan as ONE Pallas kernel
   (``kernels.miniconv_pass.miniconv_encoder``; interpret mode on CPU);
-* ``per_pass`` — the legacy reference: one pallas_call per shader pass.
+* ``per_pass`` — the ``reference`` backend: one pallas_call per shader
+  pass (the legacy oracle).
 
 ``--compare`` benchmarks fused vs per_pass vs XLA head-to-head (the
 ISSUE-1 acceptance check: fused <= per_pass at every size).  5 FPS
@@ -21,12 +25,12 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.miniconv import miniconv_apply, miniconv_init, standard_spec
+from repro.deploy import Deployment, DeploymentConfig
 
 ARTIFACT = "BENCH_frame_time.json"
+C_IN = 4
 
 
 def time_frames(fn, x, *, n: int = 20) -> tuple[float, float]:
@@ -53,25 +57,36 @@ def median_frames(fn, x, *, n: int = 8, warm: int = 3) -> float:
     return float(np.median(ts))
 
 
-def _path(params, spec, mode):
-    if mode == "xla":
-        return jax.jit(lambda x: miniconv_apply(params, spec, x))
-    return lambda x: miniconv_apply(params, spec, x, use_kernel=mode)
+def _deployment(x_size: int, mode: str, *, k: int) -> Deployment:
+    """One declarative config per (input size, execution backend) cell."""
+    return Deployment.build(DeploymentConfig.standard(
+        k=k, c_in=C_IN, h=x_size, backend=mode))
+
+
+def _path(dep: Deployment, edge_params):
+    """The encoder-only (edge half) execution path of a deployment."""
+    fn = lambda x: dep.split.edge_apply(edge_params, x)
+    return jax.jit(fn) if dep.backend.mode == "xla" else fn
+
+
+def _edge_params(dep: Deployment, seed: int = 0):
+    return dep.init(jax.random.PRNGKey(seed))["edge"]
 
 
 def run(sizes=(64, 128, 256, 400), *, k: int = 4, n: int = 20,
         modes=("xla",), artifact: str = ARTIFACT):
-    spec = standard_spec(c_in=4, k=k)
-    params = miniconv_init(jax.random.PRNGKey(0), spec)
     rows = []
     for x_size in sizes:
-        x = jax.random.uniform(jax.random.PRNGKey(1), (1, x_size, x_size, 4))
+        x = jax.random.uniform(jax.random.PRNGKey(1),
+                               (1, x_size, x_size, C_IN))
         row = {"x": x_size}
         for mode in modes:
+            dep = _deployment(x_size, mode, k=k)
             # interpret-mode paths execute the kernel body in Python; keep
             # their repeat count small so the sweep stays tractable
-            n_mode = n if mode == "xla" else max(n // 5, 3)
-            mean, std = time_frames(_path(params, spec, mode), x, n=n_mode)
+            n_mode = n if dep.backend.mode == "xla" else max(n // 5, 3)
+            mean, std = time_frames(_path(dep, _edge_params(dep)), x,
+                                    n=n_mode)
             row[f"{mode}_ms"] = mean * 1e3
             row[f"{mode}_std_ms"] = std * 1e3
         first = f"{modes[0]}_ms"
@@ -98,12 +113,11 @@ def run_compare(sizes=(64, 128, 256), *, k: int = 4, n: int = 20,
     """
     rows = run(sizes, k=k, n=n, modes=("xla", "fused", "per_pass"),
                artifact=None)
-    spec = standard_spec(c_in=4, k=k)
-    params = miniconv_init(jax.random.PRNGKey(0), spec)
-    fused = _path(params, spec, "fused")
     for r in rows:
+        dep = _deployment(r["x"], "fused", k=k)
+        fused = _path(dep, _edge_params(dep))
         xb = jax.random.uniform(jax.random.PRNGKey(1),
-                                (batch, r["x"], r["x"], 4))
+                                (batch, r["x"], r["x"], C_IN))
         frames = [xb[i:i + 1] for i in range(batch)]
 
         def seq(frames_, _fused=fused):

@@ -11,21 +11,33 @@ FIFO / batch-aware simulation (``repro.serving.server``).
 ``--smoke`` runs a fast CI gate: at N=8 clients the micro-batched p95
 must not exceed the FIFO p95 (greedy batching strictly dominates FIFO
 when t(B) is sublinear; a regression here means the batched path or the
-simulator broke).
+simulator broke).  ``--manifest`` builds the whole split pipeline from a
+serialised :class:`repro.deploy.DeploymentConfig` (the file
+``python -m repro.deploy`` writes) instead of the built-in default, so
+the gate exercises exactly the deployment that would ship.
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
+import sys
 
-from benchmarks.decision_latency import build, measure_service_curve
+# make `python benchmarks/scalability.py` work from any cwd: the shared
+# setup lives in the sibling benchmarks package, which is rooted at the
+# repo top level, not on the default script path
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.decision_latency import (build, load_manifest,
+                                         measure_service_curve)
 from repro.serving.netsim import shaped
 from repro.serving.server import BatchQueueSim, PolicyServer, QueueSim
 
 
 def run(*, mbps: float = 100.0, rate_hz: float = 10.0,
         budget_ms: float = 100.0, n_max: int = 256, max_batch: int = 8,
-        max_wait_ms: float = 0.0, iters: int = 10, horizon_s: float = 5.0):
-    setup = build()
+        max_wait_ms: float = 0.0, iters: int = 10, horizon_s: float = 5.0,
+        config=None):
+    setup = build(config=config)
     s_mono = PolicyServer(serve_fn=setup.mono_server_fn).measure(
         setup.obs, iters=iters)
     _, model = measure_service_curve(setup, max_batch=max_batch,
@@ -84,12 +96,16 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI gate: fail unless batched p95 <= FIFO "
                          "p95 at N=8 clients")
+    ap.add_argument("--manifest", default=None,
+                    help="deployment manifest JSON to build the pipeline "
+                         "from (see python -m repro.deploy)")
     args = ap.parse_args(argv)
+    config = load_manifest(args.manifest) if args.manifest else None
     if args.smoke:
         rows, p95s = run(mbps=args.mbps, budget_ms=args.budget_ms,
                          max_batch=args.max_batch,
                          max_wait_ms=args.max_wait_ms,
-                         n_max=64, iters=5, horizon_s=2.0)
+                         n_max=64, iters=5, horizon_s=2.0, config=config)
         fifo, batched = p95s[8]
         # 5% relative tolerance: both sims are driven by a wall-clock
         # measured t(B) curve, and a single noisy sample on a shared CI
@@ -102,7 +118,8 @@ def main(argv=None):
             raise SystemExit(1)
     else:
         run(mbps=args.mbps, budget_ms=args.budget_ms,
-            max_batch=args.max_batch, max_wait_ms=args.max_wait_ms)
+            max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+            config=config)
 
 
 if __name__ == "__main__":

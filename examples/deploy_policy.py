@@ -1,0 +1,70 @@
+"""The declarative deployment flow, end to end, in one page:
+
+  manifest (DeploymentConfig)  ->  Deployment.build  ->  served policy
+
+Builds the paper's standard split policy from ONE frozen config, ships
+it through JSON (exactly what would travel to the device, like the
+paper's compiled shader bundles), and drives the resolved pipeline:
+edge encode -> wire payload -> micro-batched server -> actions.
+
+  PYTHONPATH=src python examples/deploy_policy.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.deploy import Deployment, DeploymentConfig
+
+
+def main():
+    # ---- 1. declare the deployment ----------------------------------------
+    cfg = DeploymentConfig.standard(
+        k=4, c_in=12, h=84,          # the paper's K=4 encoder at task scale
+        backend="fused",             # whole PassPlan as ONE Pallas kernel
+        codec="uint8",               # the paper's wire format
+        max_batch=8,                 # server micro-batching policy
+    )
+    print("manifest:")
+    print(cfg.to_json(indent=2))
+
+    # ---- 2. ship the manifest (JSON round-trip) ---------------------------
+    shipped = DeploymentConfig.from_json(cfg.to_json())
+    assert shipped == cfg
+
+    # ---- 3. compile it ----------------------------------------------------
+    dep = Deployment.build(shipped)
+    print(f"\nbackend={dep.backend.name}: {dep.backend.description}")
+    print(f"plan: {dep.plan.total_passes} shader passes -> "
+          f"feature {dep.plan.feature_shape}, {dep.wire_bytes} B on the "
+          f"wire (raw frame {dep.frame_bytes} B)")
+    print(f"VMEM-safe micro-batch on TPU: B <= {dep.max_safe_batch} "
+          f"(configured max_batch={dep.config.max_batch})")
+
+    # ---- 4. serve it ------------------------------------------------------
+    params = dep.init(jax.random.PRNGKey(0))
+    client, server = dep.serving_pair(params)
+
+    obs = jax.random.uniform(jax.random.PRNGKey(1), (3, 84, 84, 12))
+    payloads = [client.encode_fn(obs[i:i + 1]) for i in range(3)]
+    actions = server.serve(payloads)      # ONE batched launch for 3 clients
+    print(f"\nserved {len(actions)} queued requests in one micro-batch; "
+          f"each action/feature vector: {actions[0].shape}")
+
+    # the served result equals the monolithic forward pass
+    ref = dep.encoder.apply(params, obs)
+    batched = jnp.stack(actions)
+    err = float(jnp.max(jnp.abs(batched - ref)))
+    print(f"max |served - monolithic| = {err:.2e} "
+          f"(uint8 wire quantisation)")
+    assert err < 0.05
+
+    # ---- 5. the same config drives training -------------------------------
+    # repro.rl.train accepts deploy_config=..., so the trained encoder and
+    # the served encoder can never disagree on spec/plan/head:
+    #   train("pendulum", "miniconv4",
+    #         deploy_config=dataclasses.replace(cfg, backend="xla"))
+    print("\ndone: one manifest -> plan, kernels, codec, client, server.")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,11 +10,10 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core.wire import frame_bytes_rgba, get_codec
+from repro.deploy import Deployment, DeploymentConfig
 from repro.envs.wrappers import make_pixel_env
-from repro.rl.networks import make_encoder, miniconv_edge_apply
 from repro.rl.train import train
-from repro.serving.client import DecisionLoop, EdgeClient
+from repro.serving.client import DecisionLoop
 from repro.serving.netsim import shaped
 from repro.serving.server import PolicyServer
 
@@ -41,27 +40,23 @@ def main(argv=None):
         return
 
     # ---- 2. deploy split (paper §4.3) -------------------------------------
-    enc = make_encoder(args.encoder, c_in=9)
-    params = enc.init(jax.random.PRNGKey(0))
-    codec = get_codec("uint8")
+    # ONE declarative config resolves the spec, plan, codec and both
+    # serving halves; the same manifest could ship to the device as JSON.
+    cfg = DeploymentConfig.from_encoder_name(args.encoder, c_in=9, h=84,
+                                             backend="xla")
+    dep = Deployment.build(cfg)
+    params = dep.init(jax.random.PRNGKey(0))
     env = make_pixel_env(args.task, train=False)
     _, obs = env.reset(jax.random.PRNGKey(1))
+    obs = obs[None]                       # the client serves one frame
 
-    @jax.jit
-    def edge_fn(obs):
-        return codec.encode(miniconv_edge_apply(params["edge"], enc.spec,
-                                                obs[None]))
+    client = dep.client(params)
+    # feats.mean() stands in for the policy head after the projection
+    server_fn = dep.server_fn(params, head=lambda z: z.mean())
 
-    @jax.jit
-    def server_fn(payload):
-        feats = codec.decode(payload)
-        return feats.mean()      # stands in for the policy head
-
-    fshape = (1, 11, 11, enc.spec.k_out)
-    client = EdgeClient(edge_fn, codec.wire_bytes(fshape))
     j = client.measure(obs)
-    srv = PolicyServer(server_fn).measure(edge_fn(obs))
-    frame_bytes = frame_bytes_rgba(84) * 3
+    srv = PolicyServer(server_fn).measure(client.encode_fn(obs))
+    frame_bytes = dep.frame_bytes
 
     print(f"\ndeployment: edge {j*1e3:.2f} ms, wire "
           f"{client.wire_bytes} B (raw {frame_bytes} B)")

@@ -1,6 +1,8 @@
 """Core: the paper's contribution — MiniConv encoders, the split-policy
 architecture, wire codecs, and the decision-latency model."""
 
+from repro.core.backends import (ExecutionBackend, backend_names,
+                                 get_backend, register_backend)
 from repro.core.latency import (LinkModel, SplitConfig, break_even_bandwidth,
                                 decision_latency_server_only,
                                 decision_latency_split,
@@ -9,22 +11,23 @@ from repro.core.miniconv import (MiniConvSpec, LayerSpec, ShaderBudget,
                                  PI_ZERO_BUDGET, miniconv_apply,
                                  miniconv_feature_shape, miniconv_init,
                                  standard_spec)
-from repro.core.passplan import (LayerPlan, PassPlan, ShaderPass,
-                                 build_pass_plan, count_passes,
-                                 out_spatial_chain)
+from repro.core.passplan import (DEFAULT_VMEM_LIMIT, HeadPlan, LayerPlan,
+                                 PassPlan, ShaderPass, build_pass_plan,
+                                 count_passes, out_spatial_chain)
 from repro.core.split import (SplitModel, make_miniconv_split,
                               make_split_policy, straight_through)
 from repro.core.wire import (CODECS, WireCodec, feature_bytes,
                              frame_bytes_rgba, get_codec, roundtrip)
 
 __all__ = [
+    "ExecutionBackend", "backend_names", "get_backend", "register_backend",
     "LinkModel", "SplitConfig", "break_even_bandwidth",
     "decision_latency_server_only", "decision_latency_split",
     "paper_pi_zero_config", "MiniConvSpec", "LayerSpec", "ShaderBudget",
     "PI_ZERO_BUDGET", "miniconv_apply", "miniconv_feature_shape",
-    "miniconv_init", "standard_spec", "LayerPlan", "PassPlan", "ShaderPass",
-    "build_pass_plan", "count_passes", "out_spatial_chain", "SplitModel",
-    "make_miniconv_split", "make_split_policy", "straight_through", "CODECS",
-    "WireCodec", "feature_bytes", "frame_bytes_rgba", "get_codec",
-    "roundtrip",
+    "miniconv_init", "standard_spec", "DEFAULT_VMEM_LIMIT", "HeadPlan",
+    "LayerPlan", "PassPlan", "ShaderPass", "build_pass_plan", "count_passes",
+    "out_spatial_chain", "SplitModel", "make_miniconv_split",
+    "make_split_policy", "straight_through", "CODECS", "WireCodec",
+    "feature_bytes", "frame_bytes_rgba", "get_codec", "roundtrip",
 ]

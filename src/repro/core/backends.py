@@ -1,0 +1,132 @@
+"""Execution-backend registry: HOW a compiled PassPlan is executed.
+
+The paper's artifact separates WHAT is deployed (the
+:class:`~repro.core.miniconv.MiniConvSpec`, lowered to a budget-checked
+:class:`~repro.core.passplan.PassPlan`) from HOW it executes on a given
+substrate (fragment shaders on the Pi, Pallas kernels on TPU, plain XLA
+for training).  This module makes the HOW a first-class, registered
+object so that :class:`repro.deploy.DeploymentConfig` can name it
+declaratively and new backends (future: multi-chip sharded, CUDA, ...)
+plug in without touching any call site.
+
+Registered backends
+-------------------
+``xla``
+    XLA SAME convs — the differentiable training path.
+``reference`` (alias ``per_pass``)
+    One ``pallas_call`` per :class:`~repro.core.passplan.ShaderPass`; the
+    shader oracle the fused tiers are parity-tested against.
+``grouped``
+    One ``pallas_call`` per layer, output-group as a grid dimension.
+``fused``
+    The whole PassPlan as ONE ``pallas_call`` (VMEM-chained layers).
+``fused+head`` (alias ``fused_head``)
+    ``fused`` with the server-side projection executed as an in-kernel
+    epilogue — encoder + head in a single launch (the batched-serving /
+    replay-encoding hot path).
+
+Each backend maps to a ``miniconv_apply`` kernel mode; the legacy
+``use_kernel=`` strings resolve through this registry, so an unknown name
+fails with the full list of registered backends instead of silently
+falling through to an arbitrary path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionBackend:
+    """One way of executing a compiled MiniConv pass plan.
+
+    ``mode`` is the kernel-layer execution tier
+    (``repro.core.miniconv.miniconv_apply``'s ``use_kernel``);
+    ``fused_head`` marks backends whose head projection runs INSIDE the
+    kernel epilogue rather than as a separate XLA matmul.
+    """
+
+    name: str
+    mode: str                    # miniconv_apply execution tier
+    fused_head: bool = False
+    description: str = ""
+
+    @property
+    def is_pallas(self) -> bool:
+        """True when this backend executes Pallas kernels (and is therefore
+        subject to the VMEM residency budget when compiled on TPU)."""
+        return self.mode != "xla"
+
+
+_REGISTRY: dict[str, ExecutionBackend] = {}
+_ALIASES: dict[str, str] = {}
+
+
+def register_backend(backend: ExecutionBackend, *,
+                     aliases: Iterable[str] = ()) -> ExecutionBackend:
+    """Register an execution backend (idempotent for identical entries)."""
+    existing = _REGISTRY.get(backend.name)
+    if existing is not None and existing != backend:
+        raise ValueError(f"backend {backend.name!r} already registered "
+                         f"as {existing}")
+    _REGISTRY[backend.name] = backend
+    for a in aliases:
+        if _ALIASES.get(a, backend.name) != backend.name:
+            raise ValueError(f"alias {a!r} already points at "
+                             f"{_ALIASES[a]!r}")
+        _ALIASES[a] = backend.name
+    return backend
+
+
+def backend_names(*, include_aliases: bool = False) -> tuple[str, ...]:
+    names = list(_REGISTRY)
+    if include_aliases:
+        names += sorted(_ALIASES)
+    return tuple(names)
+
+
+def get_backend(name) -> ExecutionBackend:
+    """Resolve a backend by name or alias.
+
+    Also accepts the historical ``use_kernel`` values ``False``/``None``
+    (-> ``xla``) and ``True`` (-> ``reference``).  Unknown names raise with
+    the full registered list so a typo'd manifest fails loudly.
+    """
+    if name is False or name is None:
+        name = "xla"
+    elif name is True:           # backwards compat: old boolean flag
+        name = "reference"
+    if not isinstance(name, str):
+        raise ValueError(f"backend must be a registered name, got {name!r}; "
+                         f"registered: {', '.join(backend_names())}")
+    resolved = _ALIASES.get(name, name)
+    try:
+        return _REGISTRY[resolved]
+    except KeyError:
+        raise ValueError(
+            f"unknown execution backend {name!r}; registered backends: "
+            f"{', '.join(backend_names(include_aliases=True))} "
+            f"(False/None -> 'xla', True -> 'reference')") from None
+
+
+register_backend(ExecutionBackend(
+    "xla", "xla",
+    description="XLA SAME convs — the differentiable training path"))
+register_backend(ExecutionBackend(
+    "reference", "per_pass",
+    description="one pallas_call per ShaderPass (the shader oracle)"),
+    aliases=("per_pass",))
+register_backend(ExecutionBackend(
+    "grouped", "grouped",
+    description="one pallas_call per layer, output-group as grid dim"))
+register_backend(ExecutionBackend(
+    "fused", "fused",
+    description="whole PassPlan as ONE pallas_call (VMEM-chained layers)"))
+register_backend(ExecutionBackend(
+    "fused+head", "fused", fused_head=True,
+    description="fused kernel with the projection as an in-kernel epilogue"),
+    aliases=("fused_head",))
+
+
+__all__ = ["ExecutionBackend", "backend_names", "get_backend",
+           "register_backend"]

@@ -119,10 +119,13 @@ class MiniConvSpec:
             raise ValueError("MiniConvSpec violates shader budget:\n  " +
                              "\n  ".join(errs))
 
-    def plan(self, h: int, w: Optional[int] = None):
-        """Lower this spec onto an input size (see ``core.passplan``)."""
+    def plan(self, h: int, w: Optional[int] = None, *,
+             batch: Optional[int] = None):
+        """Lower this spec onto an input size (see ``core.passplan``);
+        ``batch=B`` additionally checks the fused kernel's B-frame VMEM
+        residency against the budget."""
         from repro.core.passplan import build_pass_plan  # lazy: avoids cycle
-        return build_pass_plan(self, h, w)
+        return build_pass_plan(self, h, w, batch=batch)
 
     def out_spatial(self, x: int) -> int:
         from repro.core.passplan import out_spatial_chain
@@ -173,19 +176,17 @@ _ACTS: dict[str, Callable] = {
 
 
 def _normalize_mode(use_kernel) -> str:
-    if use_kernel is False or use_kernel is None:
-        return "xla"
-    if use_kernel is True:        # backwards compat: old boolean flag
-        return "per_pass"
-    if use_kernel in ("xla", "fused", "per_pass", "grouped"):
-        return use_kernel
-    raise ValueError(f"use_kernel must be False|'fused'|'per_pass'|'grouped',"
-                     f" got {use_kernel!r}")
+    """Resolve ``use_kernel`` to a kernel execution tier via the backend
+    registry (``repro.core.backends``).  ``True`` keeps its historical
+    meaning (the per-pass reference oracle); unknown strings raise with the
+    full list of registered backends instead of falling through."""
+    from repro.core.backends import get_backend  # lazy: avoids cycle
+    return get_backend(use_kernel).mode
 
 
 def miniconv_apply(params, spec: MiniConvSpec, x, *,
                    use_kernel=False, tile_h: int = 8, plan=None,
-                   head=None, head_act: str = "relu"):
+                   head=None, head_act: str = "relu", interpret=None):
     """x: (B, H, W, C_in) float in [0,1] -> (B, H', W', K).
 
     Execution modes (``use_kernel``):
@@ -212,6 +213,11 @@ def miniconv_apply(params, spec: MiniConvSpec, x, *,
     epilogue (see ``kernels.miniconv_pass.miniconv_encoder``); other modes
     compute the same epilogue with XLA so training and deployment share one
     call signature.
+
+    ``interpret`` forces Pallas interpret (True) or compiled (False)
+    execution for the kernel tiers; ``None`` keeps the environment-derived
+    default (interpret off-TPU, compiled on TPU or with
+    ``REPRO_PALLAS_COMPILE=1``).
     """
     mode = _normalize_mode(use_kernel)
     if head is not None:
@@ -229,8 +235,10 @@ def miniconv_apply(params, spec: MiniConvSpec, x, *,
         bs = [params[f"layer{i}"]["bias"] for i in range(len(spec.layers))]
         if head is not None:
             return miniconv_encoder(x, ws, bs, plan, tile_h=tile_h,
-                                    head_w=hw, head_b=hb, head_act=head_act)
-        return miniconv_encoder(x, ws, bs, plan, tile_h=tile_h)
+                                    head_w=hw, head_b=hb, head_act=head_act,
+                                    interpret=interpret)
+        return miniconv_encoder(x, ws, bs, plan, tile_h=tile_h,
+                                interpret=interpret)
     if mode in ("per_pass", "grouped"):
         from repro.kernels.ops import miniconv_layer  # lazy: avoids cycles
     for i, l in enumerate(spec.layers):
@@ -239,7 +247,8 @@ def miniconv_apply(params, spec: MiniConvSpec, x, *,
             x = conv2d(p, x, stride=l.stride, padding="SAME")
         else:
             x = miniconv_layer(x, p["kernel"], p["bias"], stride=l.stride,
-                               fused_groups=(mode == "grouped"))
+                               fused_groups=(mode == "grouped"),
+                               interpret=interpret)
         x = _ACTS[l.activation](x)
     if head is not None:
         z = x.reshape(x.shape[0], -1) @ hw

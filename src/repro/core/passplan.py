@@ -80,6 +80,13 @@ def _round4(c: int) -> int:
     return -(-c // 4) * 4
 
 
+# TPU VMEM per core (~16 MB).  The fused kernel keeps the WHOLE micro-batch
+# input plus the final layer's padded intermediate resident on-chip, so the
+# deployable batch size is bounded by this budget (see
+# ``PassPlan.vmem_bytes`` / ``max_safe_batch``).
+DEFAULT_VMEM_LIMIT = 16 * 1024 * 1024
+
+
 # ---------------------------------------------------------------------------
 # IR records
 # ---------------------------------------------------------------------------
@@ -259,6 +266,78 @@ class PassPlan:
     def max_pass_samples(self) -> int:
         return max(p.samples for p in self.passes)
 
+    # ---- VMEM residency of the fused kernel --------------------------------
+    def _vmem_terms(self, *, head: Optional[HeadPlan] = None,
+                    tile_h: int = 8, itemsize: int = 4) -> tuple[int, int]:
+        """(fixed_bytes, per_frame_bytes) of the fused-kernel VMEM residency.
+
+        Mirrors the allocation pattern of
+        ``repro.kernels.miniconv_pass.miniconv_encoder``: the whole-batch
+        padded input block (scales with B), the final layer's padded-input
+        scratch, per-layer padded weights/biases, one output tile, and —
+        with a fused head — the tiled lane-padded head weight plus the
+        projection scratch.  An estimate (the compiler adds its own
+        spills), but affine in batch, which is what the deployability
+        check needs.
+        """
+        first, last = self.layers[0], self.layers[-1]
+        tile_h = max(1, min(tile_h, self.out_h))
+        n_tiles = -(-self.out_h // tile_h)
+        rows_need_max = (n_tiles * tile_h - 1) * last.stride + last.kernel
+        scratch_rows = max(last.padded_in_h, rows_need_max)
+        x0_rows = scratch_rows if len(self.layers) == 1 \
+            else first.padded_in_h
+        per_frame = x0_rows * first.padded_in_w * first.c_in_pad * itemsize
+        fixed = tile_h * last.out_w * last.c_out_pad * itemsize  # out tile
+        if len(self.layers) > 1:
+            fixed += (scratch_rows * last.padded_in_w * last.c_in_pad
+                      * 4)                                       # fp32 scratch
+        for l in self.layers:
+            fixed += (l.kernel * l.kernel * l.c_in_pad * l.c_out_pad
+                      + l.c_out_pad) * itemsize                  # weights+bias
+        if head is not None:
+            if head.in_dim != self.flat_features:
+                raise ValueError(
+                    f"head.in_dim {head.in_dim} != plan.flat_features "
+                    f"{self.flat_features}")
+            d_pad = -(-head.out_dim // 128) * 128   # lane-padded for the MXU
+            tile_flat = tile_h * last.out_w * last.c_out_pad
+            fixed += n_tiles * tile_flat * d_pad * itemsize   # tiled weight
+            fixed += d_pad * (4 + 2 * itemsize)    # z scratch + bias + z out
+        return fixed, per_frame
+
+    def vmem_bytes(self, batch: int = 1, *, head: Optional[HeadPlan] = None,
+                   tile_h: int = 8, itemsize: int = 4) -> int:
+        """Estimated VMEM bytes of ONE fused launch over a B-frame batch."""
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        fixed, per_frame = self._vmem_terms(head=head, tile_h=tile_h,
+                                            itemsize=itemsize)
+        return fixed + batch * per_frame
+
+    def max_safe_batch(self, *, head: Optional[HeadPlan] = None,
+                       tile_h: int = 8, itemsize: int = 4,
+                       vmem_limit: int = DEFAULT_VMEM_LIMIT) -> int:
+        """Largest micro-batch whose fused launch fits the VMEM budget
+        (0 when even the batch-independent residency exceeds it)."""
+        fixed, per_frame = self._vmem_terms(head=head, tile_h=tile_h,
+                                            itemsize=itemsize)
+        return max(0, (vmem_limit - fixed) // per_frame)
+
+    def check_batch(self, batch: int, *, head: Optional[HeadPlan] = None,
+                    tile_h: int = 8, itemsize: int = 4,
+                    vmem_limit: int = DEFAULT_VMEM_LIMIT) -> None:
+        """Raise if a B-frame fused launch exceeds the VMEM budget."""
+        need = self.vmem_bytes(batch, head=head, tile_h=tile_h,
+                               itemsize=itemsize)
+        if need > vmem_limit:
+            raise ValueError(
+                f"micro-batch {batch} needs ~{need / 2**20:.2f} MiB VMEM "
+                f"> budget {vmem_limit / 2**20:.2f} MiB for a "
+                f"{self.in_h}x{self.in_w} input; max safe batch is "
+                f"{self.max_safe_batch(head=head, tile_h=tile_h, itemsize=itemsize, vmem_limit=vmem_limit)} "
+                f"(split the batch or lower the input size)")
+
     def validate(self) -> None:
         errs: list[str] = []
         for p in self.passes:
@@ -274,12 +353,18 @@ class PassPlan:
 # ---------------------------------------------------------------------------
 
 def build_pass_plan(spec: MiniConvSpec, h: int, w: Optional[int] = None, *,
-                    validate: bool = True) -> PassPlan:
+                    validate: bool = True, batch: Optional[int] = None,
+                    tile_h: int = 8,
+                    vmem_limit: int = DEFAULT_VMEM_LIMIT) -> PassPlan:
     """Lower ``spec`` applied to an (h, w) input into a :class:`PassPlan`.
 
     Raises ``ValueError`` at build time if any emitted pass exceeds the
     spec's :class:`ShaderBudget` — the kernel layer can assume every plan it
-    receives is deployable.
+    receives is deployable.  With ``batch=B`` the plan is additionally
+    checked against the fused kernel's VMEM residency model: the WHOLE
+    B-frame micro-batch input must fit the ``vmem_limit`` budget
+    (:meth:`PassPlan.check_batch`), so an un-launchable micro-batch is
+    rejected before it reaches a compiled kernel.
     """
     w = h if w is None else w
     layers: list[LayerPlan] = []
@@ -305,9 +390,11 @@ def build_pass_plan(spec: MiniConvSpec, h: int, w: Optional[int] = None, *,
                     passes=tuple(passes), budget=spec.budget)
     if validate:
         plan.validate()
+    if batch is not None:
+        plan.check_batch(batch, tile_h=tile_h, vmem_limit=vmem_limit)
     return plan
 
 
-__all__ = ["HeadPlan", "LayerPlan", "PassPlan", "ShaderPass",
-           "build_pass_plan", "count_passes", "out_size",
+__all__ = ["DEFAULT_VMEM_LIMIT", "HeadPlan", "LayerPlan", "PassPlan",
+           "ShaderPass", "build_pass_plan", "count_passes", "out_size",
            "out_spatial_chain", "same_pads"]

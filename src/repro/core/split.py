@@ -105,20 +105,18 @@ def make_miniconv_split(spec, server_apply, *, h: int, w: Optional[int] = None,
     """Split policy whose edge half is a MiniConv encoder compiled to a
     :class:`~repro.core.passplan.PassPlan`.
 
-    The plan is built (and budget-checked) once, up front, for the concrete
-    input size the edge device will see; it then serves both execution
-    (``use_kernel="fused"`` runs the whole plan as one Pallas kernel) and
-    accounting (``SplitModel.wire_bytes()`` with no argument).
+    .. deprecated::
+        Thin shim over :meth:`repro.deploy.Deployment.build` — the one
+        canonical pipeline constructor.  The built deployment's split is
+        returned with ``server_apply`` substituted, so custom server
+        halves keep working; new code should construct a
+        :class:`repro.deploy.DeploymentConfig` and use
+        ``Deployment.build(cfg).split`` directly.
     """
-    from repro.core.miniconv import miniconv_apply  # lazy: avoids cycle
+    from repro.deploy import Deployment, DeploymentConfig  # lazy: layering
 
-    plan = spec.plan(h, w)
-
-    def edge_apply(params, obs):
-        # the prebuilt plan is reused (and size-checked) on every frame
-        return miniconv_apply(params, spec, obs, use_kernel=use_kernel,
-                              plan=plan if use_kernel == "fused" else None)
-
-    return SplitModel(edge_apply=edge_apply, server_apply=server_apply,
-                      codec=get_codec(codec),
-                      quantize_in_train=quantize_in_train, plan=plan)
+    cfg = DeploymentConfig(spec=spec, in_h=h, in_w=h if w is None else w,
+                           backend=use_kernel, codec=codec,
+                           quantize_in_train=quantize_in_train)
+    dep = Deployment.build(cfg)
+    return dataclasses.replace(dep.split, server_apply=server_apply)

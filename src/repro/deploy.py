@@ -1,0 +1,450 @@
+"""repro.deploy — ONE declarative deployment API: MiniConvSpec -> served policy.
+
+The paper's artifact is a deployment *pipeline*: a
+:class:`~repro.core.miniconv.MiniConvSpec` is compiled into an ordered
+shader-pass schedule (:class:`~repro.core.passplan.PassPlan`), executed by
+a backend (fragment shaders on the Pi, Pallas kernels here), split at the
+wire boundary (:class:`~repro.core.split.SplitModel` +
+:class:`~repro.core.wire.WireCodec`) and served to clients
+(:class:`~repro.serving.server.BatchingPolicyServer` /
+:class:`~repro.serving.client.EdgeClient`).  This module makes that whole
+pipeline ONE object:
+
+* :class:`DeploymentConfig` — a frozen, JSON-serialisable manifest of the
+  deployment: the spec, the concrete input size, the execution backend
+  (``repro.core.backends`` registry), the micro-batching policy, the wire
+  codec and the head placement.  ``to_dict``/``from_dict`` round-trip, so
+  a manifest can ship to the device exactly like the paper's compiled
+  shader bundles.
+* :class:`Deployment` — the compiled form.  ``Deployment.build(config)``
+  resolves the config ONCE into the budget-checked PassPlan (including
+  the batch-size-aware VMEM check), parameter initialisers, the
+  :class:`SplitModel`, the RL-facing :class:`~repro.rl.networks.Encoder`,
+  the codec, and factories for a ready ``EdgeClient`` /
+  ``BatchingPolicyServer`` pair.
+
+Every entry point — training (``repro.rl.train``), serving, and the
+benchmarks — constructs the pipeline through ``Deployment.build``; the
+legacy constructors (``rl.networks.make_encoder``,
+``core.split.make_miniconv_split``) survive as thin deprecation shims
+over it.
+
+Quick start::
+
+    from repro.deploy import Deployment, DeploymentConfig
+
+    cfg = DeploymentConfig.standard(k=4, c_in=12, h=84, backend="fused")
+    dep = Deployment.build(cfg)
+    params = dep.init(jax.random.PRNGKey(0))
+    client = dep.client(params)            # EdgeClient: obs -> payload
+    server = dep.server(params)            # BatchingPolicyServer
+    actions = server.serve([client.encode_fn(obs)])
+
+Run ``python -m repro.deploy`` to write (and round-trip-verify) a
+deployment manifest.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends import ExecutionBackend, backend_names, get_backend
+from repro.core.miniconv import (_ACTS, LayerSpec, MiniConvSpec,
+                                 ShaderBudget, miniconv_apply, standard_spec)
+from repro.core.passplan import HeadPlan, PassPlan, build_pass_plan
+from repro.core.split import SplitModel
+from repro.core.wire import CODECS, WireCodec, get_codec
+from repro.nn.layers import dense
+from repro.rl.networks import Encoder, miniconv_encoder_init
+from repro.serving.client import EdgeClient
+from repro.serving.server import BatchingPolicyServer
+
+CONFIG_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# The manifest
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentConfig:
+    """Declarative, serialisable description of one split-policy deployment.
+
+    Fields
+    ------
+    spec            : the MiniConv encoder architecture (budget-checked).
+    in_h, in_w      : the concrete input size the edge device sees.
+    backend         : execution-backend name (``repro.core.backends``):
+                      ``xla`` | ``reference`` | ``grouped`` | ``fused`` |
+                      ``fused+head``.
+    interpret       : Pallas interpret (True) vs compiled (False) for the
+                      kernel backends; ``None`` = auto (compiled on TPU or
+                      with ``REPRO_PALLAS_COMPILE=1``).
+    codec           : wire-codec name (``repro.core.wire.CODECS``).
+    head_dim        : width of the server-side projection (paper: 512).
+    head_act        : activation of the projection.
+    head_placement  : ``"server"`` — projection runs as the server half of
+                      the split (the paper's deployment); ``"fused"`` —
+                      projection is fused with the encoder into one call
+                      (one kernel launch under the ``fused`` backends; the
+                      colocated training / replay-encoding hot path).
+    max_batch       : server micro-batching cap (B frames per launch).
+    max_wait_ms     : how long the server holds a batch open for
+                      stragglers.
+    tile_h          : fused-kernel output-row tile height.
+    quantize_in_train : straight-through-quantise features during training
+                      so training numerics match the deployed wire.
+    """
+
+    spec: MiniConvSpec
+    in_h: int
+    in_w: int
+    backend: str = "fused"
+    interpret: Optional[bool] = None
+    codec: str = "uint8"
+    head_dim: int = 512
+    head_act: str = "relu"
+    head_placement: str = "server"
+    max_batch: int = 8
+    max_wait_ms: float = 0.0
+    tile_h: int = 8
+    quantize_in_train: bool = False
+
+    def __post_init__(self):
+        # canonicalise backend aliases (and the legacy use_kernel booleans)
+        # at construction so equality and serialisation are name-stable
+        object.__setattr__(self, "backend", get_backend(self.backend).name)
+
+    # ---- construction helpers ---------------------------------------------
+    @classmethod
+    def standard(cls, *, k: int = 4, c_in: int = 12, h: int = 84,
+                 w: Optional[int] = None, **overrides) -> "DeploymentConfig":
+        """The paper's standard encoder family, deployed at (h, w)."""
+        return cls(spec=standard_spec(c_in=c_in, k=k), in_h=h,
+                   in_w=h if w is None else w, **overrides)
+
+    @classmethod
+    def from_encoder_name(cls, name: str, *, c_in: int, h: int = 84,
+                          w: Optional[int] = None,
+                          **overrides) -> "DeploymentConfig":
+        """``miniconv<K>`` (the ``rl.networks.make_encoder`` names)."""
+        if not name.startswith("miniconv"):
+            raise ValueError(f"not a MiniConv deployment: {name!r} "
+                             f"(full_cnn has no split pipeline)")
+        k = int(name.replace("miniconv", ""))
+        return cls.standard(k=k, c_in=c_in, h=h, w=w, **overrides)
+
+    # ---- validation --------------------------------------------------------
+    def validate(self) -> None:
+        get_backend(self.backend)          # raises listing registered names
+        if self.codec not in CODECS:
+            raise ValueError(f"unknown codec {self.codec!r}; registered: "
+                             f"{', '.join(CODECS)}")
+        if self.head_placement not in ("server", "fused"):
+            raise ValueError(f"head_placement must be 'server' or 'fused', "
+                             f"got {self.head_placement!r}")
+        if self.head_act not in _ACTS:
+            raise ValueError(f"unknown head_act {self.head_act!r}; one of "
+                             f"{', '.join(_ACTS)}")
+        if self.in_h < 1 or self.in_w < 1:
+            raise ValueError(f"input size must be positive, got "
+                             f"{(self.in_h, self.in_w)}")
+        if self.head_dim < 1:
+            raise ValueError(f"head_dim must be positive: {self.head_dim}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1: {self.max_batch}")
+        if self.max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0: {self.max_wait_ms}")
+        if self.tile_h < 1:
+            raise ValueError(f"tile_h must be >= 1: {self.tile_h}")
+        self.spec.validate()
+
+    # ---- serialisation -----------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-safe manifest; inverse of :meth:`from_dict`."""
+        d = dataclasses.asdict(self)
+        d["spec"] = {
+            "layers": [dataclasses.asdict(l) for l in self.spec.layers],
+            "budget": dataclasses.asdict(self.spec.budget),
+        }
+        d["version"] = CONFIG_VERSION
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DeploymentConfig":
+        d = dict(d)
+        version = d.pop("version", CONFIG_VERSION)
+        if version != CONFIG_VERSION:
+            raise ValueError(f"unsupported manifest version {version} "
+                             f"(this build reads {CONFIG_VERSION})")
+        s = d.pop("spec")
+        spec = MiniConvSpec(
+            layers=tuple(LayerSpec(**l) for l in s["layers"]),
+            budget=ShaderBudget(**s.get("budget", {})))
+        return cls(spec=spec, **d)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "DeploymentConfig":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# The compiled deployment
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Deployment:
+    """A resolved deployment: every pipeline stage, built once from config.
+
+    Construct with :meth:`build`.  The object is cheap to carry around —
+    parameters stay OUTSIDE (functional style), so one Deployment serves
+    training, serving, and benchmarking with different parameter sets.
+    """
+
+    config: DeploymentConfig
+    backend: ExecutionBackend
+    plan: PassPlan
+    head_plan: HeadPlan
+    codec: WireCodec
+    split: SplitModel
+    encoder: Encoder
+    max_safe_batch: int
+
+    # ---- the compiler ------------------------------------------------------
+    @classmethod
+    def build(cls, config: DeploymentConfig) -> "Deployment":
+        """Resolve ``config`` into the executable pipeline.
+
+        The PassPlan is lowered and shader-budget-checked once, up front;
+        when the configured backend runs the fused Pallas kernel compiled
+        (``interpret=False``, or ``interpret=None`` resolving to compiled
+        on a TPU host / under ``REPRO_PALLAS_COMPILE=1``), the configured
+        micro-batch is additionally validated against the fused kernel's
+        VMEM residency model (:meth:`PassPlan.check_batch`), so an
+        un-launchable deployment fails at build time, not on the device.
+        """
+        config.validate()
+        backend = get_backend(config.backend)
+        spec = config.spec
+        plan = build_pass_plan(spec, config.in_h, config.in_w)
+        head_plan = plan.head(config.head_dim, activation=config.head_act)
+        fused_head = backend.fused_head or (config.head_placement == "fused"
+                                            and backend.mode == "fused")
+        vmem_head = head_plan if fused_head else None
+        max_safe = plan.max_safe_batch(head=vmem_head, tile_h=config.tile_h)
+        # The VMEM residency model describes the FUSED kernel (whole-batch
+        # input resident on-chip); per-pass/grouped kernels stream row
+        # blocks and are batch-size-indifferent.  interpret=None resolves
+        # the same way the kernel layer does, so a default manifest built
+        # on a TPU host (compiled) is still checked at build time.
+        if config.interpret is None:
+            compiled = bool(os.environ.get("REPRO_PALLAS_COMPILE")) \
+                or jax.default_backend() == "tpu"
+        else:
+            compiled = not config.interpret
+        if backend.mode == "fused" and compiled:
+            plan.check_batch(config.max_batch, head=vmem_head,
+                             tile_h=config.tile_h)
+        codec = get_codec(config.codec)
+        mode, tile_h, interpret = backend.mode, config.tile_h, config.interpret
+        head_act = config.head_act
+
+        def edge_apply(edge_params, obs):
+            # deployment path: the prebuilt plan is reused (and
+            # size-checked) on every frame
+            return miniconv_apply(edge_params, spec, obs, use_kernel=mode,
+                                  plan=plan if mode == "fused" else None,
+                                  tile_h=tile_h, interpret=interpret)
+
+        def server_apply(server_params, feats):
+            z = dense(server_params["proj"], feats.reshape(feats.shape[0], -1))
+            return _ACTS[head_act](z)
+
+        split = SplitModel(edge_apply=edge_apply, server_apply=server_apply,
+                           codec=codec,
+                           quantize_in_train=config.quantize_in_train,
+                           plan=plan)
+
+        def init(key):
+            return miniconv_encoder_init(key, spec, h=config.in_h,
+                                         w=config.in_w,
+                                         feature_dim=config.head_dim)
+
+        if config.head_placement == "fused" or backend.fused_head:
+            def encoder_apply(params, obs):
+                # encoder + projection in one call (one kernel launch
+                # under the fused backends)
+                p = plan if (mode == "fused"
+                             and obs.shape[1:3] == (plan.in_h, plan.in_w)) \
+                    else None
+                _, z = miniconv_apply(params["edge"], spec, obs,
+                                      use_kernel=mode, plan=p, tile_h=tile_h,
+                                      head=params["server"]["proj"],
+                                      head_act=head_act, interpret=interpret)
+                return z
+        else:
+            def encoder_apply(params, obs):
+                # training path tolerates other input sizes: re-lower the
+                # plan when the observation differs from the deployed size
+                p = plan if (mode == "fused"
+                             and obs.shape[1:3] == (plan.in_h, plan.in_w)) \
+                    else None
+                feats = miniconv_apply(params["edge"], spec, obs,
+                                       use_kernel=mode, plan=p,
+                                       tile_h=tile_h, interpret=interpret)
+                return server_apply(params["server"], feats)
+
+        encoder = Encoder(name=f"miniconv{spec.k_out}", init=init,
+                          apply=encoder_apply, spec=spec)
+        return cls(config=config, backend=backend, plan=plan,
+                   head_plan=head_plan, codec=codec, split=split,
+                   encoder=encoder, max_safe_batch=max_safe)
+
+    # ---- parameters --------------------------------------------------------
+    def init(self, key):
+        """{"edge": conv params, "server": {"proj": dense}} — the dict split
+        IS the deployment split."""
+        return self.encoder.init(key)
+
+    # ---- accounting --------------------------------------------------------
+    @property
+    def spec(self) -> MiniConvSpec:
+        return self.config.spec
+
+    @property
+    def wire_bytes(self) -> int:
+        """Exact bytes of one request's payload on the link."""
+        return self.split.wire_bytes()
+
+    def wire_bytes_batch(self, batch: Optional[int] = None) -> int:
+        return self.split.wire_bytes(
+            batch=self.config.max_batch if batch is None else batch)
+
+    @property
+    def frame_bytes(self) -> int:
+        """Bytes of the raw observation upload the server-only baseline
+        transmits (RGBA-packed: 4 channels per texture)."""
+        c = self.spec.layers[0].c_in
+        return self.config.in_h * self.config.in_w * (-(-c // 4) * 4)
+
+    # ---- served pipeline ---------------------------------------------------
+    def edge_fn(self, params) -> Callable:
+        """Jitted on-device half: obs -> wire payload."""
+        edge_params = params["edge"]
+        return jax.jit(lambda obs: self.split.edge_step(edge_params, obs))
+
+    def server_fn(self, params, head: Optional[Callable] = None) -> Callable:
+        """Jitted remote half: payload -> features (or actions via
+        ``head``, e.g. a policy MLP applied after the projection)."""
+        server_params = params["server"]
+
+        def fn(payload):
+            z = self.split.server_step(server_params, payload)
+            return head(z) if head is not None else z
+        return jax.jit(fn)
+
+    def server_batch_fn(self, params,
+                        head: Optional[Callable] = None) -> Callable:
+        """Jitted micro-batched remote half: stacked payload -> actions."""
+        server_params = params["server"]
+
+        def fn(payload_batch):
+            z = self.split.server_step_batch(server_params, payload_batch)
+            return head(z) if head is not None else z
+        return jax.jit(fn)
+
+    def client(self, params) -> EdgeClient:
+        """Ready :class:`EdgeClient` for these parameters."""
+        return EdgeClient(encode_fn=self.edge_fn(params),
+                          wire_bytes=self.wire_bytes)
+
+    def server(self, params,
+               head: Optional[Callable] = None) -> BatchingPolicyServer:
+        """Ready :class:`BatchingPolicyServer` under this config's
+        batching policy (``max_batch`` / ``max_wait_ms``)."""
+        return BatchingPolicyServer(
+            serve_batch_fn=self.server_batch_fn(params, head),
+            max_batch=self.config.max_batch,
+            max_wait_s=self.config.max_wait_ms / 1e3)
+
+    def serving_pair(self, params, head: Optional[Callable] = None
+                     ) -> tuple[EdgeClient, BatchingPolicyServer]:
+        """The paper's Figure-5 pipeline, ready to measure."""
+        return self.client(params), self.server(params, head)
+
+
+# ---------------------------------------------------------------------------
+# Manifest CLI: python -m repro.deploy
+# ---------------------------------------------------------------------------
+
+def _verify_roundtrip(cfg: DeploymentConfig, *, seed: int = 0) -> None:
+    """Assert a reloaded manifest reproduces identical encoder outputs and
+    wire payloads (the ISSUE-3 acceptance criterion)."""
+    import numpy as np
+    cfg2 = DeploymentConfig.from_json(cfg.to_json())
+    assert cfg2 == cfg, "manifest round-trip changed the config"
+    dep, dep2 = Deployment.build(cfg), Deployment.build(cfg2)
+    key = jax.random.PRNGKey(seed)
+    params = dep.init(key)
+    params2 = dep2.init(key)
+    obs = jax.random.uniform(jax.random.PRNGKey(seed + 1),
+                             (1, cfg.in_h, cfg.in_w,
+                              cfg.spec.layers[0].c_in))
+    np.testing.assert_array_equal(dep.encoder.apply(params, obs),
+                                  dep2.encoder.apply(params2, obs))
+    p1 = dep.split.edge_step(params["edge"], obs)
+    p2 = dep2.split.edge_step(params2["edge"], obs)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Build the standard deployment config, write its "
+                    "manifest, reload it and verify the round-trip.")
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--c-in", type=int, default=12)
+    ap.add_argument("--x", type=int, default=84, help="input H=W")
+    ap.add_argument("--backend", default="fused",
+                    help=f"one of: {', '.join(backend_names())}")
+    ap.add_argument("--codec", default="uint8")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--out", default="deploy_manifest.json")
+    ap.add_argument("--verify", action="store_true",
+                    help="rebuild from the reloaded manifest and assert "
+                         "identical encoder outputs and wire payloads")
+    args = ap.parse_args(argv)
+
+    cfg = DeploymentConfig.standard(k=args.k, c_in=args.c_in, h=args.x,
+                                    backend=args.backend, codec=args.codec,
+                                    max_batch=args.max_batch)
+    dep = Deployment.build(cfg)
+    with open(args.out, "w") as f:
+        f.write(cfg.to_json(indent=2))
+    print(f"  wrote {args.out}")
+    reloaded = DeploymentConfig.from_json(open(args.out).read())
+    assert reloaded == cfg, "manifest on disk does not round-trip"
+    print(f"  round-trip OK: backend={dep.backend.name} "
+          f"plan={dep.plan.total_passes} passes "
+          f"feature={dep.plan.feature_shape} wire={dep.wire_bytes}B "
+          f"max_safe_batch={dep.max_safe_batch}")
+    if args.verify:
+        _verify_roundtrip(cfg)
+        print("  verified: reloaded manifest reproduces identical encoder "
+              "outputs and wire payloads")
+
+
+if __name__ == "__main__":
+    main()
+
+
+__all__ = ["CONFIG_VERSION", "Deployment", "DeploymentConfig"]

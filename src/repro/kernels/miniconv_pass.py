@@ -45,7 +45,9 @@ execution tiers (see ``repro.core.passplan`` for the schedule itself):
    being re-read from HBM.  Head-weight rows beyond ``plan.out_h`` and
    channels beyond ``plan.k_out`` are zero-padded, which cancels the
    contributions of the over-allocated tile rows and RGBA padding
-   channels.
+   channels; the projection width D is lane-padded to a multiple of 128
+   so the epilogue matmul fills whole MXU lanes (the zero columns are
+   sliced off the returned projection).
 
 Stride-2 passes subsample the input rows/cols, mirroring the shader's
 half-resolution render target.  On very large inputs the fused kernel keeps
@@ -469,22 +471,31 @@ def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
         else:
             hw_pad = _tile_head(head_w, plan, tile_h=tile_h,
                                 n_tiles=n_tiles)
+        # Lane-pad the projection width to a multiple of 128 so the
+        # epilogue matmul fills whole MXU lanes (D=512 is already aligned;
+        # ragged widths gain zero columns that are sliced off below).
         d_out = hw_pad.shape[-1]
+        d_pad = -(-d_out // 128) * 128
+        if d_pad != d_out:
+            hw_pad = jnp.pad(hw_pad, ((0, 0), (0, 0), (0, d_pad - d_out)))
         hb = (jnp.zeros((d_out,), hw_pad.dtype) if head_b is None
-              else head_b).reshape(1, d_out)
-        in_specs.append(pl.BlockSpec((n_tiles, tile_flat, d_out),
+              else head_b)
+        if d_pad != d_out:
+            hb = jnp.pad(hb, ((0, d_pad - d_out),))
+        hb = hb.reshape(1, d_pad)
+        in_specs.append(pl.BlockSpec((n_tiles, tile_flat, d_pad),
                                      lambda b_, t: (0, 0, 0)))
-        in_specs.append(pl.BlockSpec((1, d_out), lambda b_, t: (0, 0)))
+        in_specs.append(pl.BlockSpec((1, d_pad), lambda b_, t: (0, 0)))
         args += [hw_pad, hb]
-        out_specs.append(pl.BlockSpec((1, d_out), lambda b_, t: (b_, 0)))
-        out_shape.append(jax.ShapeDtypeStruct((B, d_out), x.dtype))
+        out_specs.append(pl.BlockSpec((1, d_pad), lambda b_, t: (b_, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, d_pad), x.dtype))
 
     scratch_shapes = []
     if L > 1:
         scratch_shapes.append(pltpu.VMEM(
             (scratch_rows, last.padded_in_w, last.c_in_pad), jnp.float32))
     if has_head:
-        scratch_shapes.append(pltpu.VMEM((1, head_w.shape[-1]), jnp.float32))
+        scratch_shapes.append(pltpu.VMEM((1, d_pad), jnp.float32))
 
     out = pl.pallas_call(
         functools.partial(_encoder_kernel, plan=plan, tile_h=tile_h,
@@ -500,7 +511,7 @@ def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
         interpret=interpret,
     )(*args)
     feats = out[0][:, :plan.out_h, :, :plan.k_out]
-    return (feats, out[1]) if has_head else feats
+    return (feats, out[1][:, :d_out]) if has_head else feats
 
 
 __all__ = ["miniconv_pass", "miniconv_layer_grouped", "miniconv_encoder",

@@ -59,7 +59,7 @@ def full_cnn_apply(params, obs):
 
 
 def miniconv_encoder_init(key, spec: MiniConvSpec, *, h: int = 84,
-                          w: int = 84):
+                          w: int = 84, feature_dim: int = FEATURE_DIM):
     """Edge (conv passes) + server (projection) halves, kept separate so
     the deployment split is a dict split.  The projection width comes from
     the compiled PassPlan — the single source of truth for the edge
@@ -68,7 +68,7 @@ def miniconv_encoder_init(key, spec: MiniConvSpec, *, h: int = 84,
     fh, fw, k = spec.plan(h, w).feature_shape
     return {
         "edge": miniconv_init(kg(), spec),
-        "server": {"proj": dense_init(kg(), fh * fw * k, FEATURE_DIM,
+        "server": {"proj": dense_init(kg(), fh * fw * k, feature_dim,
                                       use_bias=True)},
     }
 
@@ -104,37 +104,26 @@ def make_encoder(name: str, c_in: int = 9, *, use_kernel=False,
                  fused_head: bool = False) -> Encoder:
     """name in {"full_cnn", "miniconv4", "miniconv16"}.
 
-    ``use_kernel`` selects the MiniConv execution tier (False = XLA for
-    training; "fused" runs the whole pass plan as one Pallas kernel for
-    deployment-path benchmarks).  ``fused_head`` routes the flatten +
-    dense(512) projection through the encoder's fused-head epilogue — with
-    ``use_kernel="fused"`` the conv stack AND the projection execute as ONE
-    Pallas kernel (batched: the leading obs dim is the kernel's outer grid
-    dimension), which is the batched-serving/replay-encoding hot path.
+    .. deprecated::
+        For MiniConv encoders this is a thin shim over
+        :meth:`repro.deploy.Deployment.build` — the one canonical pipeline
+        constructor.  ``use_kernel`` maps to the execution-backend registry
+        (``repro.core.backends``) and ``fused_head=True`` to
+        ``head_placement="fused"``.  New code should build a
+        :class:`repro.deploy.DeploymentConfig` directly; ``full_cnn`` (the
+        paper's server-only baseline) has no split pipeline and stays
+        here.
     """
     if name == "full_cnn":
         return Encoder("full_cnn",
                        lambda key: full_cnn_init(key, c_in),
                        full_cnn_apply)
     if name.startswith("miniconv"):
-        k = int(name.replace("miniconv", ""))
-        spec = standard_spec(c_in=c_in, k=k)
-
-        if fused_head:
-            def apply(params, obs):
-                _, z = miniconv_apply(params["edge"], spec, obs,
-                                      use_kernel=use_kernel,
-                                      head=params["server"]["proj"])
-                return z
-        else:
-            def apply(params, obs):
-                feats = miniconv_edge_apply(params["edge"], spec, obs,
-                                            use_kernel=use_kernel)
-                return miniconv_server_apply(params["server"], feats)
-
-        return Encoder(name,
-                       lambda key: miniconv_encoder_init(key, spec),
-                       apply, spec=spec)
+        from repro.deploy import Deployment, DeploymentConfig
+        cfg = DeploymentConfig.from_encoder_name(
+            name, c_in=c_in, backend=use_kernel,
+            head_placement="fused" if fused_head else "server")
+        return Deployment.build(cfg).encoder
     raise ValueError(f"unknown encoder {name}")
 
 

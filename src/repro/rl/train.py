@@ -32,6 +32,28 @@ from repro.rl.sac import SACConfig, init_sac, make_sac_update
 TASK_ALGO = {"walker": "ppo", "hopper": "sac", "pendulum": "ddpg"}
 
 
+def _pipeline_encoder(encoder_name: str, c_in: int, *,
+                      deploy_config: "Optional[DeploymentConfig]" = None):
+    """Every trainer constructs its encoder pipeline via Deployment.build.
+
+    Training runs the differentiable ``xla`` backend; the SAME
+    DeploymentConfig (with the deployment backend swapped in) later serves
+    the trained parameters, so train and deploy can never disagree on the
+    spec, plan, or head.  ``full_cnn`` — the paper's server-only baseline —
+    has no split pipeline and bypasses Deployment.
+    """
+    # lazy: repro.deploy composes rl.networks primitives, so the trainer
+    # imports it per call to keep the package import acyclic
+    from repro.deploy import Deployment, DeploymentConfig
+    if deploy_config is not None:
+        return Deployment.build(deploy_config).encoder
+    if encoder_name == "full_cnn":
+        return make_encoder(encoder_name, c_in=c_in)
+    cfg = DeploymentConfig.from_encoder_name(encoder_name, c_in=c_in,
+                                             backend="xla")
+    return Deployment.build(cfg).encoder
+
+
 @dataclasses.dataclass
 class TrainResult:
     task: str
@@ -76,10 +98,12 @@ def _track_episodes(returns_buf, ep_ret, rewards, dones):
 
 def train_ppo(task: str, encoder_name: str, *, total_steps: int = 20_000,
               seed: int = 0, cfg: Optional[PPOConfig] = None,
-              log_every: int = 10, verbose: bool = False) -> TrainResult:
+              log_every: int = 10, verbose: bool = False,
+              deploy_config: Optional[DeploymentConfig] = None) -> TrainResult:
     cfg = cfg or PPOConfig()
     env = make_pixel_env(task, train=True)
-    encoder = make_encoder(encoder_name, c_in=env.obs_shape[-1])
+    encoder = _pipeline_encoder(encoder_name, env.obs_shape[-1],
+                                deploy_config=deploy_config)
     step_fn, init_carry = make_ppo_step(env, encoder, cfg)
     params, opt_state, env_states, obs = init_carry(jax.random.PRNGKey(seed))
 
@@ -104,9 +128,12 @@ def train_ppo(task: str, encoder_name: str, *, total_steps: int = 20_000,
 
 def _train_offpolicy(task: str, encoder_name: str, algo: str, *,
                      total_steps: int, seed: int,
-                     cfg, verbose: bool = False) -> TrainResult:
+                     cfg, verbose: bool = False,
+                     deploy_config: Optional[DeploymentConfig] = None
+                     ) -> TrainResult:
     env = make_pixel_env(task, train=True)
-    encoder = make_encoder(encoder_name, c_in=env.obs_shape[-1])
+    encoder = _pipeline_encoder(encoder_name, env.obs_shape[-1],
+                                deploy_config=deploy_config)
     kg = KeyGen(jax.random.PRNGKey(seed))
 
     if algo == "sac":
@@ -162,16 +189,25 @@ def _train_offpolicy(task: str, encoder_name: str, algo: str, *,
 
 
 def train(task: str, encoder_name: str, *, total_steps: int = 20_000,
-          seed: int = 0, verbose: bool = False) -> TrainResult:
-    """Train the paper's (task, algorithm) pairing with a given encoder."""
+          seed: int = 0, verbose: bool = False,
+          deploy_config: Optional[DeploymentConfig] = None) -> TrainResult:
+    """Train the paper's (task, algorithm) pairing with a given encoder.
+
+    ``deploy_config`` (optional) trains against an explicit
+    :class:`repro.deploy.DeploymentConfig` instead of the named encoder's
+    default, so a serialised deployment manifest can drive training too.
+    """
     algo = TASK_ALGO[task]
     if algo == "ppo":
         return train_ppo(task, encoder_name, total_steps=total_steps,
-                         seed=seed, verbose=verbose)
+                         seed=seed, verbose=verbose,
+                         deploy_config=deploy_config)
     if algo == "sac":
         return _train_offpolicy(task, encoder_name, "sac",
                                 total_steps=total_steps, seed=seed,
-                                cfg=SACConfig(), verbose=verbose)
+                                cfg=SACConfig(), verbose=verbose,
+                                deploy_config=deploy_config)
     return _train_offpolicy(task, encoder_name, "ddpg",
                             total_steps=total_steps, seed=seed,
-                            cfg=DDPGConfig(), verbose=verbose)
+                            cfg=DDPGConfig(), verbose=verbose,
+                            deploy_config=deploy_config)

@@ -1,5 +1,22 @@
 """Serving: the deployed half of the split-policy system.
 
+The canonical way to construct everything in this package is the
+declarative deployment API::
+
+    from repro.deploy import Deployment, DeploymentConfig
+
+    dep = Deployment.build(DeploymentConfig.standard(k=4, c_in=12, h=84))
+    params = dep.init(key)
+    client, server = dep.serving_pair(params)   # EdgeClient + batching server
+
+``DeploymentConfig`` names the encoder spec, input size, execution
+backend, wire codec, head placement and micro-batching policy in one
+frozen, JSON-serialisable manifest; ``Deployment.build`` resolves it into
+the compiled PassPlan, the :class:`~repro.core.split.SplitModel`, and the
+ready client/server pair below.  The classes in this package remain the
+building blocks that Deployment assembles (and that tests/simulations
+drive directly).
+
 Module map
 ----------
 ``netsim``
@@ -7,13 +24,15 @@ Module map
     :class:`ShapedLink` serialises transfers FIFO with finite bandwidth,
     propagation delay and optional deterministic jitter.
 ``client``
-    On-device half: :class:`EdgeClient` (encoder + wire codec, single and
-    batched measurement) and :class:`DecisionLoop` (the paper's Figure-5
-    obs -> action pipeline for one client).
+    On-device half: :class:`EdgeClient` (the deployment's ``edge_fn`` —
+    fused encoder + wire codec — with single and batched measurement) and
+    :class:`DecisionLoop` (the paper's Figure-5 obs -> action pipeline for
+    one client).
 ``server``
     Remote half: :class:`PolicyServer` (one request per call, the paper's
     FIFO baseline) and :class:`BatchingPolicyServer` (micro-batching: up
-    to ``max_batch`` queued requests served by ONE batched call; measures
+    to ``max_batch`` queued requests served by ONE batched call — the
+    policy comes from ``DeploymentConfig.max_batch/max_wait_ms``; measures
     the t(B) service curve interpolated by :class:`BatchServiceModel`).
     Queueing simulators reproduce Table 6: :class:`QueueSim` (strict
     FIFO) and :class:`BatchQueueSim` (batch-aware — launches whatever has
@@ -21,11 +40,11 @@ Module map
     for the batch to fill).
 
 The batched request path end-to-end: each client encodes ONE frame
-(``repro.core.split.SplitModel.edge_step``), payloads are stacked with
-``repro.core.wire.stack_payloads`` (per-request quantisation headers
+(``Deployment.edge_fn`` / ``SplitModel.edge_step``), payloads are stacked
+with ``repro.core.wire.stack_payloads`` (per-request quantisation headers
 survive stacking), and the server decodes + projects the whole
-micro-batch in one call (``SplitModel.server_step_batch`` /
-``benchmarks.decision_latency.build``'s ``split_server_batch_fn``).
+micro-batch in one call (``Deployment.server_batch_fn`` /
+``SplitModel.server_step_batch``).
 """
 from repro.serving.netsim import ShapedLink, LinkTrace
 from repro.serving.server import (BatchingPolicyServer, BatchQueueSim,
