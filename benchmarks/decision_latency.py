@@ -146,7 +146,9 @@ def run_queue(*, n_clients: int = 8, mbps: float = 100.0, k: int = 4,
 
     The batched p95 uses the MEASURED service-time curve t(B) of the
     batched split server, so the comparison reflects real amortisation on
-    this host, not an assumed speedup.
+    this host, not an assumed speedup.  When the deployment manifest sets
+    ``n_servers > 1`` the sharded fleet p95 is reported too — same
+    measured curve on every server, routed by the configured policy.
     """
     setup = setup or build(k=k)
     times, model = measure_service_curve(setup, max_batch=max_batch,
@@ -165,6 +167,20 @@ def run_queue(*, n_clients: int = 8, mbps: float = 100.0, k: int = 4,
           f"{row['fifo_p95_ms']:.2f} ms vs micro-batched "
           f"{row['batched_p95_ms']:.2f} ms "
           f"(max_batch={max_batch}, max_wait={max_wait_ms:.0f}ms)")
+    cfg = setup.deployment.config
+    if cfg.n_servers > 1:
+        # same batching policy as the FIFO/batched rows above (and as the
+        # measured t(B) curve), not the manifest's — the three p95s must
+        # be comparable
+        fleet = setup.deployment.fleet_sim(model, uplink=shaped(mbps),
+                                           rate_hz=rate_hz,
+                                           max_batch=max_batch,
+                                           max_wait_s=max_wait_ms / 1e3)
+        row["fleet_p95_ms"] = fleet.p95(n_clients) * 1e3
+        row["n_servers"] = cfg.n_servers
+        row["router"] = cfg.router
+        print(f"  N={n_clients} fleet ({cfg.n_servers} servers, "
+              f"{cfg.router}): p95 {row['fleet_p95_ms']:.2f} ms")
     return row
 
 

@@ -8,13 +8,22 @@ them with one batched call whose service time t(B) is measured on this
 host from the real jitted batched network.  Queueing is the deterministic
 FIFO / batch-aware simulation (``repro.serving.server``).
 
+The FLEET table extrapolates Table 6 to ``n_servers`` sharded servers
+behind each routing policy (``repro.serving.fleet``): supported clients
+vs fleet size, every server charging the same measured t(B) curve, all
+fed from the shared shaped uplink.  The fleet shape is config-level —
+``DeploymentConfig.n_servers`` / ``router`` — so a manifest alone turns
+the single-server reproduction into a capacity-planning model.
+
 ``--smoke`` runs a fast CI gate: at N=8 clients the micro-batched p95
 must not exceed the FIFO p95 (greedy batching strictly dominates FIFO
 when t(B) is sublinear; a regression here means the batched path or the
-simulator broke).  ``--manifest`` builds the whole split pipeline from a
-serialised :class:`repro.deploy.DeploymentConfig` (the file
-``python -m repro.deploy`` writes) instead of the built-in default, so
-the gate exercises exactly the deployment that would ship.
+simulator broke), and the fleet table must be MONOTONE — more servers
+never supports fewer clients, for every routing policy.  ``--manifest``
+builds the whole split pipeline from a serialised
+:class:`repro.deploy.DeploymentConfig` (the file ``python -m
+repro.deploy`` writes) instead of the built-in default, so the gates
+exercise exactly the deployment that would ship.
 """
 from __future__ import annotations
 
@@ -29,6 +38,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 from benchmarks.decision_latency import (build, load_manifest,
                                          measure_service_curve)
+from repro.serving.fleet import router_names
 from repro.serving.netsim import shaped
 from repro.serving.server import BatchQueueSim, PolicyServer, QueueSim
 
@@ -36,13 +46,14 @@ from repro.serving.server import BatchQueueSim, PolicyServer, QueueSim
 def run(*, mbps: float = 100.0, rate_hz: float = 10.0,
         budget_ms: float = 100.0, n_max: int = 256, max_batch: int = 8,
         max_wait_ms: float = 0.0, iters: int = 10, horizon_s: float = 5.0,
-        config=None):
-    setup = build(config=config)
+        config=None, setup=None, model=None):
+    setup = setup or build(config=config)
     s_mono = PolicyServer(serve_fn=setup.mono_server_fn).measure(
         setup.obs, iters=iters)
-    _, model = measure_service_curve(setup, max_batch=max_batch,
-                                     max_wait_s=max_wait_ms / 1e3,
-                                     iters=iters)
+    if model is None:
+        _, model = measure_service_curve(setup, max_batch=max_batch,
+                                         max_wait_s=max_wait_ms / 1e3,
+                                         iters=iters)
     s_split = model(1)
 
     sims = {
@@ -87,25 +98,90 @@ def run(*, mbps: float = 100.0, rate_hz: float = 10.0,
     return rows, p95s
 
 
+def fleet_table(setup, model, *, mbps: float = 100.0, rate_hz: float = 10.0,
+                budget_ms: float = 100.0, horizon_s: float = 2.0,
+                n_servers_list=(1, 2, 4, 8), routers=None,
+                n_max: int = 4096, max_batch=None, max_wait_s=None):
+    """Clients supported vs fleet size, per routing policy.
+
+    Every simulation is driven from the deployment manifest: payload
+    bytes, micro-batching policy and the configured fleet shape come
+    from ``setup.deployment`` (``DeploymentConfig.n_servers/router``);
+    ``model`` is the measured t(B) curve charged by every server.  The
+    configured ``n_servers`` is always included in the sweep.
+    """
+    dep = setup.deployment
+    routers = tuple(routers) if routers else router_names()
+    sizes = sorted(set(n_servers_list) | {dep.config.n_servers})
+    # batching-policy overrides keep the sim on the SAME policy the t(B)
+    # curve was measured under when the CLI deviates from the manifest
+    base = dep.fleet_sim(model, uplink=shaped(mbps), rate_hz=rate_hz,
+                         horizon_s=horizon_s, max_batch=max_batch,
+                         max_wait_s=max_wait_s)
+    table = {}
+    for router in routers:
+        marker = " (configured)" if router == dep.config.router else ""
+        table[router] = {
+            s: base.with_servers(s, router).max_clients(
+                p95_budget_s=budget_ms / 1e3, n_max=n_max)
+            for s in sizes}
+        cells = "  ".join(f"{s}x:{table[router][s]:>5}" for s in sizes)
+        print(f"  fleet {router:<16} {cells}{marker}")
+    return table
+
+
+def check_fleet_monotone(table, *, min_gain_at_4x: float = 0.0,
+                         n_max: int = None) -> bool:
+    """The --smoke fleet gate: more servers never supports fewer clients
+    (per routing policy), and optionally 4 servers must carry at least
+    ``min_gain_at_4x`` times the single-server population.  A 4-server
+    row that saturates the ``n_max`` search cap passes the gain check —
+    capacity is at least the measurable bound, not sublinear."""
+    ok = True
+    for router, row in table.items():
+        sizes = sorted(row)
+        mono = all(row[a] <= row[b] for a, b in zip(sizes, sizes[1:]))
+        gain = row[4] / max(row[1], 1) if {1, 4} <= set(sizes) else None
+        capped = gain is not None and n_max is not None and row[4] >= n_max
+        scaled = gain is None or capped or gain >= min_gain_at_4x
+        print(f"  fleet gate {router:<16} monotone={mono}"
+              + (f" gain@4x={gain:.1f}" if gain is not None else "")
+              + (" (>= search cap)" if capped else ""))
+        ok = ok and mono and scaled
+    return ok
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mbps", type=float, default=100.0)
+    ap.add_argument("--fleet-mbps", type=float, default=1000.0,
+                    help="shared ingress bandwidth for the FLEET table "
+                         "(a fleet front door is provisioned beyond the "
+                         "paper's single 100 Mb/s shaped link)")
     ap.add_argument("--budget-ms", type=float, default=100.0)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=0.0)
     ap.add_argument("--smoke", action="store_true",
-                    help="fast CI gate: fail unless batched p95 <= FIFO "
-                         "p95 at N=8 clients")
+                    help="fast CI gate: batched p95 <= FIFO p95 at N=8 "
+                         "clients, and the fleet table is monotone in "
+                         "n_servers with >= 2x clients at 4 servers")
+    ap.add_argument("--no-fleet", action="store_true",
+                    help="skip the fleet table (single-server rows only)")
     ap.add_argument("--manifest", default=None,
                     help="deployment manifest JSON to build the pipeline "
                          "from (see python -m repro.deploy)")
     args = ap.parse_args(argv)
     config = load_manifest(args.manifest) if args.manifest else None
+    setup = build(config=config)
     if args.smoke:
+        _, model = measure_service_curve(setup, max_batch=args.max_batch,
+                                         max_wait_s=args.max_wait_ms / 1e3,
+                                         iters=5)
         rows, p95s = run(mbps=args.mbps, budget_ms=args.budget_ms,
                          max_batch=args.max_batch,
                          max_wait_ms=args.max_wait_ms,
-                         n_max=64, iters=5, horizon_s=2.0, config=config)
+                         n_max=64, iters=5, horizon_s=2.0,
+                         setup=setup, model=model)
         fifo, batched = p95s[8]
         # 5% relative tolerance: both sims are driven by a wall-clock
         # measured t(B) curve, and a single noisy sample on a shared CI
@@ -114,12 +190,27 @@ def main(argv=None):
         ok = batched <= 1.05 * fifo + 1e-9
         print(f"  smoke: batched p95 {batched:.2f} ms <= 1.05 * FIFO p95 "
               f"{fifo:.2f} ms at N=8: {ok}")
-        if not ok:
+        table = fleet_table(setup, model, mbps=args.fleet_mbps,
+                            budget_ms=args.budget_ms, horizon_s=2.0,
+                            n_max=2048, max_batch=args.max_batch,
+                            max_wait_s=args.max_wait_ms / 1e3)
+        fleet_ok = check_fleet_monotone(table, min_gain_at_4x=2.0,
+                                        n_max=2048)
+        print(f"  smoke: fleet monotone in n_servers with >= 2x clients "
+              f"at 4 servers: {fleet_ok}")
+        if not (ok and fleet_ok):
             raise SystemExit(1)
     else:
+        _, model = measure_service_curve(setup, max_batch=args.max_batch,
+                                         max_wait_s=args.max_wait_ms / 1e3)
         run(mbps=args.mbps, budget_ms=args.budget_ms,
             max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
-            config=config)
+            setup=setup, model=model)
+        if not args.no_fleet:
+            fleet_table(setup, model, mbps=args.fleet_mbps,
+                        budget_ms=args.budget_ms,
+                        max_batch=args.max_batch,
+                        max_wait_s=args.max_wait_ms / 1e3)
 
 
 if __name__ == "__main__":

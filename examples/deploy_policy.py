@@ -58,12 +58,34 @@ def main():
           f"(uint8 wire quantisation)")
     assert err < 0.05
 
-    # ---- 5. the same config drives training -------------------------------
+    # ---- 5. size the fleet ------------------------------------------------
+    # the same manifest drives capacity planning: n_servers sharded
+    # micro-batching servers behind a routing policy, each charging the
+    # measured t(B) curve of THIS host's server
+    from repro.serving.netsim import shaped
+    bsrv = dep.server(params)
+    bsrv.measure(payloads[0], batch_sizes=(1, 2, 4, 8), iters=3)
+    fleet = dep.fleet_sim(bsrv.service_model(), uplink=shaped(1000),
+                          horizon_s=2.0)
+    n_target = 500
+    need = fleet.min_servers(n_target, p95_budget_s=0.1, n_servers_max=16)
+    one = fleet.with_servers(1).max_clients(n_max=1024)
+    if need:
+        print(f"\nfleet sizing ({fleet.router}): {need} server(s) keep "
+              f"{n_target} clients @ 10 Hz under p95 < 100 ms "
+              f"(1 server supports {one})")
+    else:            # min_servers returns 0 when no fleet size suffices
+        print(f"\nfleet sizing ({fleet.router}): even 16 servers cannot "
+              f"keep {n_target} clients under p95 < 100 ms on this host "
+              f"(1 server supports {one})")
+
+    # ---- 6. the same config drives training -------------------------------
     # repro.rl.train accepts deploy_config=..., so the trained encoder and
     # the served encoder can never disagree on spec/plan/head:
     #   train("pendulum", "miniconv4",
     #         deploy_config=dataclasses.replace(cfg, backend="xla"))
-    print("\ndone: one manifest -> plan, kernels, codec, client, server.")
+    print("\ndone: one manifest -> plan, kernels, codec, client, server, "
+          "fleet plan.")
 
 
 if __name__ == "__main__":

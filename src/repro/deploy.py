@@ -63,6 +63,7 @@ from repro.core.wire import CODECS, WireCodec, get_codec
 from repro.nn.layers import dense
 from repro.rl.networks import Encoder, miniconv_encoder_init
 from repro.serving.client import EdgeClient
+from repro.serving.fleet import ROUTERS, FleetQueueSim
 from repro.serving.server import BatchingPolicyServer
 
 CONFIG_VERSION = 1
@@ -100,6 +101,13 @@ class DeploymentConfig:
     tile_h          : fused-kernel output-row tile height.
     quantize_in_train : straight-through-quantise features during training
                       so training numerics match the deployed wire.
+    n_servers       : fleet size — how many independent micro-batching
+                      servers share the ingress (1 = the paper's Table 6
+                      single server).
+    router          : fleet routing policy (``repro.serving.fleet.ROUTERS``):
+                      ``round_robin`` | ``least_loaded`` |
+                      ``client_affinity`` (hash-pinned, keeps one client's
+                      requests ordered).
     """
 
     spec: MiniConvSpec
@@ -115,6 +123,8 @@ class DeploymentConfig:
     max_wait_ms: float = 0.0
     tile_h: int = 8
     quantize_in_train: bool = False
+    n_servers: int = 1
+    router: str = "round_robin"
 
     def __post_init__(self):
         # canonicalise backend aliases (and the legacy use_kernel booleans)
@@ -163,6 +173,11 @@ class DeploymentConfig:
             raise ValueError(f"max_wait_ms must be >= 0: {self.max_wait_ms}")
         if self.tile_h < 1:
             raise ValueError(f"tile_h must be >= 1: {self.tile_h}")
+        if self.n_servers < 1:
+            raise ValueError(f"n_servers must be >= 1: {self.n_servers}")
+        if self.router not in ROUTERS:
+            raise ValueError(f"unknown router {self.router!r}; registered: "
+                             f"{', '.join(ROUTERS)}")
         self.spec.validate()
 
     # ---- serialisation -----------------------------------------------------
@@ -381,6 +396,36 @@ class Deployment:
         """The paper's Figure-5 pipeline, ready to measure."""
         return self.client(params), self.server(params, head)
 
+    def fleet_sim(self, service_model: Callable[[int], float], *, uplink,
+                  rate_hz: float = 10.0, horizon_s: float = 5.0,
+                  action_bytes: int = 64,
+                  n_servers: Optional[int] = None,
+                  router: Optional[str] = None,
+                  max_batch: Optional[int] = None,
+                  max_wait_s: Optional[float] = None) -> FleetQueueSim:
+        """Fleet-scale queue simulator for THIS deployment.
+
+        Payload bytes, micro-batching policy and fleet shape
+        (``n_servers`` / ``router``) all come from the manifest —
+        keyword overrides take precedence, so a benchmark sweeping the
+        batching policy can keep the sim consistent with the policy it
+        MEASURED t(B) under; ``service_model`` is that measured curve
+        (``BatchingPolicyServer.service_model()``), charged by every
+        server in the fleet.  At ``n_servers=1`` this is exactly the
+        Table 6 batched simulation.
+        """
+        cfg = self.config
+        return FleetQueueSim(
+            service_time_s=service_model(1), uplink=uplink,
+            payload_bytes=self.wire_bytes, action_bytes=action_bytes,
+            rate_hz=rate_hz, horizon_s=horizon_s,
+            max_batch=cfg.max_batch if max_batch is None else max_batch,
+            max_wait_s=cfg.max_wait_ms / 1e3 if max_wait_s is None
+            else max_wait_s,
+            service_model=service_model,
+            n_servers=cfg.n_servers if n_servers is None else n_servers,
+            router=cfg.router if router is None else router)
+
 
 # ---------------------------------------------------------------------------
 # Manifest CLI: python -m repro.deploy
@@ -418,6 +463,10 @@ def main(argv=None):
                     help=f"one of: {', '.join(backend_names())}")
     ap.add_argument("--codec", default="uint8")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--n-servers", type=int, default=1,
+                    help="fleet size for the sharded serving simulation")
+    ap.add_argument("--router", default="round_robin",
+                    help=f"fleet routing policy: {', '.join(ROUTERS)}")
     ap.add_argument("--out", default="deploy_manifest.json")
     ap.add_argument("--verify", action="store_true",
                     help="rebuild from the reloaded manifest and assert "
@@ -426,7 +475,9 @@ def main(argv=None):
 
     cfg = DeploymentConfig.standard(k=args.k, c_in=args.c_in, h=args.x,
                                     backend=args.backend, codec=args.codec,
-                                    max_batch=args.max_batch)
+                                    max_batch=args.max_batch,
+                                    n_servers=args.n_servers,
+                                    router=args.router)
     dep = Deployment.build(cfg)
     with open(args.out, "w") as f:
         f.write(cfg.to_json(indent=2))
@@ -436,7 +487,8 @@ def main(argv=None):
     print(f"  round-trip OK: backend={dep.backend.name} "
           f"plan={dep.plan.total_passes} passes "
           f"feature={dep.plan.feature_shape} wire={dep.wire_bytes}B "
-          f"max_safe_batch={dep.max_safe_batch}")
+          f"max_safe_batch={dep.max_safe_batch} "
+          f"fleet={cfg.n_servers}x/{cfg.router}")
     if args.verify:
         _verify_roundtrip(cfg)
         print("  verified: reloaded manifest reproduces identical encoder "

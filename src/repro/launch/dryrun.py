@@ -48,7 +48,6 @@ def run_one(arch: str, shape_id: str, mesh_name: str, *,
     r = analyse(compiled, arch=arch, shape_cfg=SHAPES[shape_id],
                 mesh_name=mesh_name, chips=chips, cfg=get_config(arch))
     if verbose:
-        ca = compiled.cost_analysis()
         print(f"  cost_analysis: flops/chip={r.flops_per_chip:.3e} "
               f"bytes/chip={r.bytes_per_chip:.3e}")
         print(f"  collectives/chip: { {k: v for k, v in

@@ -37,7 +37,17 @@ Module map
     Queueing simulators reproduce Table 6: :class:`QueueSim` (strict
     FIFO) and :class:`BatchQueueSim` (batch-aware — launches whatever has
     arrived when the server frees up, optionally holding ``max_wait_s``
-    for the batch to fill).
+    for the batch to fill).  Downlink accounting serialises: a batch of
+    B actions charges B transfer slots on the return link, not one.
+``fleet``
+    Fleet scale: :class:`FleetQueueSim` shards the batch-aware
+    simulation across ``n_servers`` micro-batching servers behind a
+    pluggable router (``ROUTERS``: ``round_robin`` / ``least_loaded`` /
+    ``client_affinity`` hash pinning), each with its own t(B) curve and
+    serialised downlink, all fed from the shared shaped uplink.  Fleet
+    sizing via ``max_clients`` (geometric + binary search) and
+    ``min_servers``; ``n_servers=1`` reduces bitwise to
+    :class:`BatchQueueSim`.
 
 The batched request path end-to-end: each client encodes ONE frame
 (``Deployment.edge_fn`` / ``SplitModel.edge_step``), payloads are stacked
@@ -49,8 +59,11 @@ micro-batch in one call (``Deployment.server_batch_fn`` /
 from repro.serving.netsim import ShapedLink, LinkTrace
 from repro.serving.server import (BatchingPolicyServer, BatchQueueSim,
                                   BatchServiceModel, PolicyServer, QueueSim)
+from repro.serving.fleet import (FleetQueueSim, ROUTERS, get_router,
+                                 register_router, router_names)
 from repro.serving.client import EdgeClient, DecisionLoop
 
 __all__ = ["ShapedLink", "LinkTrace", "PolicyServer", "BatchingPolicyServer",
-           "BatchServiceModel", "BatchQueueSim", "QueueSim", "EdgeClient",
-           "DecisionLoop"]
+           "BatchServiceModel", "BatchQueueSim", "QueueSim", "FleetQueueSim",
+           "ROUTERS", "get_router", "register_router", "router_names",
+           "EdgeClient", "DecisionLoop"]

@@ -1,0 +1,286 @@
+"""Fleet-scale serving sim conformance (ISSUE 4).
+
+Anchors: n_servers=1 reduces BITWISE to BatchQueueSim for every router;
+client_affinity keeps each client's responses ordered; capacity is
+monotone in fleet size; the fleet shape round-trips through the
+DeploymentConfig manifest.  Plus the queue-accounting bugfix sweep:
+serialised downlink and max_clients early exit.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.fleet import (FleetQueueSim, ROUTERS, get_router,
+                                 register_router, router_names, _mix32)
+from repro.serving.netsim import shaped
+from repro.serving.server import BatchQueueSim, BatchServiceModel, QueueSim
+
+MODEL = BatchServiceModel(((1, 0.008), (2, 0.009), (4, 0.011), (8, 0.015)))
+
+
+def _fleet(**kw):
+    kw.setdefault("service_time_s", 0.008)
+    kw.setdefault("uplink", shaped(100))
+    kw.setdefault("payload_bytes", 10_000)
+    kw.setdefault("horizon_s", 5.0)
+    return FleetQueueSim(**kw)
+
+
+# ---------------------------------------------------------------- routers
+def test_router_registry():
+    assert set(router_names()) >= {"round_robin", "least_loaded",
+                                   "client_affinity"}
+    with pytest.raises(ValueError, match="unknown router"):
+        get_router("nope")
+    assert get_router("round_robin") is ROUTERS["round_robin"]
+    custom = lambda client, seq, t, q, free: 0
+    assert get_router(custom) is custom                # callables pass through
+    register_router("_test_pin_zero", custom)
+    try:
+        assert get_router("_test_pin_zero") is custom
+    finally:
+        del ROUTERS["_test_pin_zero"]
+
+
+def test_affinity_hash_deterministic_and_spread():
+    assert _mix32(7) == _mix32(7)                      # stable across calls
+    # 256 sequential client ids spread over 8 servers reasonably evenly
+    counts = np.bincount([_mix32(c) % 8 for c in range(256)], minlength=8)
+    assert counts.min() > 0 and counts.max() < 2.5 * counts.mean()
+
+
+def test_router_out_of_range_rejected():
+    bad = _fleet(n_servers=2, router=lambda *a: 5)
+    with pytest.raises(ValueError, match="router sent request"):
+        bad.latencies(2)
+
+
+# ------------------------------------------------- single-server reduction
+@pytest.mark.parametrize("router", ["round_robin", "least_loaded",
+                                    "client_affinity"])
+@pytest.mark.parametrize("max_wait_s", [0.0, 0.002, 1.0])
+def test_n_servers_1_reduces_bitwise_to_batch_sim(router, max_wait_s):
+    common = dict(service_time_s=0.008, payload_bytes=10_000,
+                  horizon_s=5.0, max_batch=8, max_wait_s=max_wait_s,
+                  service_model=MODEL)
+    for n in (1, 7, 32):
+        ref = BatchQueueSim(uplink=shaped(100), **common)
+        flt = FleetQueueSim(uplink=shaped(100), n_servers=1, router=router,
+                            **common)
+        np.testing.assert_array_equal(flt.latencies(n), ref.latencies(n))
+
+
+def test_n_servers_1_max_batch_1_is_fifo():
+    fifo = QueueSim(service_time_s=0.008, uplink=shaped(100),
+                    payload_bytes=10_000, horizon_s=5.0)
+    flt = _fleet(n_servers=1, max_batch=1)
+    np.testing.assert_array_equal(flt.latencies(16), fifo.latencies(16))
+
+
+# ---------------------------------------------------------------- ordering
+def _hetero(router):
+    """2-server fleet where server 1 is 30x slower: round_robin bounces a
+    client between a fast and a slow server; affinity pins it."""
+    slow = BatchServiceModel(((1, 0.060), (8, 0.070)))
+    fast = BatchServiceModel(((1, 0.002), (8, 0.003)))
+    return _fleet(n_servers=2, router=router, max_batch=8,
+                  service_models=(fast, slow), horizon_s=3.0)
+
+
+def test_client_affinity_preserves_per_client_order():
+    tr = _hetero("client_affinity").trace(6)
+    for c in range(6):
+        mine = tr[tr["client"] == c]
+        assert len(set(mine["server"])) == 1           # pinned to one server
+        assert np.all(np.diff(mine["recv"]) > 0)       # responses in order
+
+
+def test_round_robin_reorders_on_heterogeneous_fleet():
+    """The contrast that motivates affinity routing: per-request spreading
+    across a fast and a slow server returns some client's actions out of
+    order.  5 clients on 2 servers make each client alternate servers
+    (global seq parity flips every round); a service gap longer than the
+    decision period then inverts consecutive responses."""
+    slow = BatchServiceModel(((1, 0.250), (8, 0.260)))
+    fast = BatchServiceModel(((1, 0.002), (8, 0.003)))
+    sim = _fleet(n_servers=2, router="round_robin", max_batch=8,
+                 service_models=(fast, slow), horizon_s=3.0)
+    tr = sim.trace(5)
+    out_of_order = any(np.any(np.diff(tr[tr["client"] == c]["recv"]) < 0)
+                       for c in range(5))
+    assert out_of_order
+
+
+def test_least_loaded_prefers_idle_server():
+    tr = _hetero("least_loaded").trace(2)
+    # with a 30x slow server 1, load-aware routing sends almost all
+    # traffic to fast server 0 (slow one only gets probed when 0 is busy)
+    assert np.mean(tr["server"] == 0) > 0.7
+
+
+def test_round_robin_spreads_evenly():
+    tr = _fleet(n_servers=4, router="round_robin", max_batch=8,
+                service_model=MODEL, horizon_s=2.0).trace(8)
+    counts = np.bincount(tr["server"], minlength=4)
+    assert counts.min() >= counts.max() - 1            # seq % n exactly
+
+
+# ------------------------------------------------------------- monotonicity
+def test_capacity_monotone_in_n_servers():
+    base = _fleet(payload_bytes=2_000, horizon_s=2.0, max_batch=8,
+                  service_model=MODEL)
+    for router in router_names():
+        caps = [base.with_servers(s, router).max_clients(n_max=1024)
+                for s in (1, 2, 4, 8)]
+        assert all(a <= b for a, b in zip(caps, caps[1:])), (router, caps)
+        assert caps[2] >= 2 * caps[0]                  # 4 servers >= 2x one
+
+
+def test_p95_monotone_in_clients_at_fixed_fleet():
+    sim = _fleet(n_servers=4, service_model=MODEL, horizon_s=2.0)
+    p95s = [sim.p95(n) for n in (4, 16, 64, 128)]
+    assert all(a <= b + 1e-9 for a, b in zip(p95s, p95s[1:]))
+
+
+def test_fleet_max_clients_matches_linear_scan():
+    """The geometric+binary search equals the single-server linear scan
+    (same monotone p95 curve, same early-exit-at-zero semantics)."""
+    common = dict(service_time_s=0.008, payload_bytes=10_000,
+                  horizon_s=5.0, max_batch=8, service_model=MODEL)
+    lin = BatchQueueSim(uplink=shaped(100), **common)
+    fast = FleetQueueSim(uplink=shaped(100), n_servers=1, **common)
+    assert fast.max_clients(n_max=128) == lin.max_clients(n_max=128)
+    # over-budget at N=1 -> 0 either way
+    tiny = dataclasses.replace(fast, service_model=None,
+                               service_time_s=0.5)
+    assert tiny.max_clients(n_max=32) == 0
+
+
+def test_min_servers_solver():
+    base = _fleet(payload_bytes=2_000, horizon_s=2.0, max_batch=8,
+                  service_model=MODEL, router="least_loaded")
+    one = base.with_servers(1).max_clients(n_max=512)
+    need = base.min_servers(2 * one, n_servers_max=8)
+    assert 2 <= need <= 4                  # ~2x clients needs ~2x servers
+    assert base.min_servers(8 * one, n_servers_max=2) == 0   # can't
+
+
+def test_service_models_length_validated():
+    bad = _fleet(n_servers=3, service_models=(MODEL,))
+    with pytest.raises(ValueError, match="service models"):
+        bad.latencies(2)
+    assert _fleet(n_servers=1).with_servers(2).n_servers == 2
+
+
+# ----------------------------------------------------------- queue accounting
+def test_batch_downlink_serialises():
+    """A batch of B actions charges B downlink transfer slots (the bug:
+    one `_return_time` for the whole batch understated batched p95)."""
+    model = BatchServiceModel(((1, 0.3), (8, 0.3)))
+    fat = dict(uplink=shaped(1),                         # 1 Mb/s downlink
+               payload_bytes=100, action_bytes=25_000,   # 0.2 s per action
+               horizon_s=0.25, rate_hz=4.0)              # 1 request/client
+    sim = BatchQueueSim(service_time_s=0.3, max_batch=8,
+                        service_model=model, **fat)
+    tx = sim.uplink.tx_time(25_000)
+    lat = sim.latencies(4)                 # observation order
+    t_obs = np.arange(4) / (4.0 * 4.0)     # staggered clients, 4 Hz
+    recv = lat + t_obs
+    # request 0 occupies the server (0.3 s); 1..3 batch together and
+    # their actions drain the downlink one tx apart — the buggy
+    # one-transfer-per-batch accounting made these diffs 0
+    np.testing.assert_allclose(np.diff(recv[1:]), tx, rtol=1e-9)
+    # and the fleet engine (n_servers=1) agrees exactly
+    flt = FleetQueueSim(service_time_s=0.3, max_batch=8,
+                        service_model=model, n_servers=1, **fat)
+    np.testing.assert_array_equal(flt.latencies(4), lat)
+
+
+def test_max_clients_survives_batch_hold_dip():
+    """With max_wait_s > 0, p95 is NOT monotone at small N (a lone
+    client waits out the hold), so a failing p95(1) must not be read as
+    saturation: the scan keeps going and finds the true capacity."""
+    bat = BatchQueueSim(service_time_s=0.008, uplink=shaped(100),
+                        payload_bytes=10_000, rate_hz=10.0, horizon_s=5.0,
+                        max_batch=8, max_wait_s=0.05, service_model=MODEL)
+    assert bat.p95(1) > 0.06                   # the hold sinks N=1
+    assert bat.max_clients(p95_budget_s=0.06, n_max=128) == 53
+    # and the fleet's geometric sweep clears the same dip
+    flt = FleetQueueSim(service_time_s=0.008, uplink=shaped(100),
+                        payload_bytes=10_000, rate_hz=10.0, horizon_s=5.0,
+                        max_batch=8, max_wait_s=0.05, service_model=MODEL,
+                        n_servers=1)
+    assert flt.max_clients(p95_budget_s=0.06, n_max=128) == 53
+
+
+def test_fleet_max_clients_survives_affinity_dip():
+    """client_affinity on a heterogeneous fleet: the only client can
+    hash onto the slow shard (p95(1) terrible), while at scale the slow
+    shard carries < 5% of traffic and drops out of the 95th percentile —
+    capacity search must not bail at the small-N failure."""
+    slow = BatchServiceModel(((1, 0.5), (8, 0.51)))
+    fast = BatchServiceModel(((1, 0.002), (8, 0.003)))
+    n_srv = 32
+    models = tuple(slow if s == _mix32(0) % n_srv else fast
+                   for s in range(n_srv))
+    flt = _fleet(service_time_s=0.002, payload_bytes=2_000, horizon_s=2.0,
+                 max_batch=8, n_servers=n_srv, router="client_affinity",
+                 service_models=models)
+    assert flt.p95(1) > 0.1                    # lone client on slow shard
+    assert flt.max_clients(p95_budget_s=0.1, n_max=256) == 256
+
+
+def test_max_clients_early_exits_when_over_budget_at_one():
+    calls = []
+
+    class Counting(QueueSim):
+        def p95(self, n):
+            calls.append(n)
+            return super().p95(n)
+
+    sim = Counting(service_time_s=0.5, uplink=shaped(100),
+                   payload_bytes=10_000, horizon_s=2.0)
+    assert sim.max_clients(p95_budget_s=0.1, n_max=512) == 0
+    assert calls == [1]                    # ONE sim, not n_max scans
+
+
+# ----------------------------------------------------------------- manifest
+def test_manifest_roundtrip_fleet_fields():
+    from repro.deploy import DeploymentConfig
+    cfg = DeploymentConfig.standard(k=4, c_in=4, h=32, n_servers=8,
+                                    router="client_affinity")
+    cfg.validate()
+    back = DeploymentConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert back.n_servers == 8 and back.router == "client_affinity"
+    # pre-fleet manifests (no fields) still load, defaulting to 1 server
+    d = cfg.to_dict()
+    del d["n_servers"], d["router"]
+    old = DeploymentConfig.from_dict(d)
+    assert old.n_servers == 1 and old.router == "round_robin"
+
+
+def test_manifest_fleet_validation():
+    from repro.deploy import DeploymentConfig
+    with pytest.raises(ValueError, match="n_servers"):
+        DeploymentConfig.standard(k=4, c_in=4, h=32, n_servers=0).validate()
+    with pytest.raises(ValueError, match="unknown router"):
+        DeploymentConfig.standard(k=4, c_in=4, h=32,
+                                  router="random").validate()
+
+
+def test_deployment_fleet_sim_from_manifest():
+    from repro.deploy import Deployment, DeploymentConfig
+    cfg = DeploymentConfig.standard(k=4, c_in=4, h=32, backend="xla",
+                                    n_servers=4, router="least_loaded",
+                                    max_batch=8)
+    dep = Deployment.build(cfg)
+    sim = dep.fleet_sim(MODEL, uplink=shaped(100), horizon_s=2.0)
+    assert sim.n_servers == 4 and sim.router == "least_loaded"
+    assert sim.payload_bytes == dep.wire_bytes
+    assert sim.max_batch == cfg.max_batch
+    assert sim.p95(8) > 0
+    # explicit overrides beat the manifest
+    assert dep.fleet_sim(MODEL, uplink=shaped(100), n_servers=2,
+                         router="round_robin").n_servers == 2

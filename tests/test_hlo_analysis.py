@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo_analysis import analyse_hlo, parse_computations
+from repro.launch.hlo_analysis import (analyse_hlo, flat_cost_analysis,
+                                       parse_computations)
 
 
 def _compiled(f, *args):
@@ -31,7 +32,7 @@ def test_scan_multiplies_by_trip_count():
     expected = 10 * 2 * 64 * 128 * 128
     assert abs(t.flops - expected) / expected < 0.01
     # the flat analysis underreports by ~10x — that's why we exist
-    flat = c.cost_analysis()["flops"]
+    flat = flat_cost_analysis(c)["flops"]
     assert t.flops > 5 * flat
 
 

@@ -12,7 +12,7 @@ from repro.core.latency import (LinkModel, SplitConfig,
                                 decision_latency_split)
 from repro.serving.client import DecisionLoop
 from repro.serving.netsim import ShapedLink, shaped
-from repro.serving.server import QueueSim
+from repro.serving.server import BatchQueueSim, BatchServiceModel, QueueSim
 
 
 def test_link_tx_time():
@@ -69,6 +69,30 @@ def test_queue_p95_monotone_in_clients():
                  payload_bytes=10_000, horizon_s=5.0)
     p95s = [q.p95(n) for n in (1, 4, 16, 64)]
     assert all(a <= b + 1e-9 for a, b in zip(p95s, p95s[1:]))
+
+
+def test_table6_pins_with_serialised_downlink():
+    """Frozen Table 6 values AFTER the downlink-accounting fix (a batch
+    of B actions charges B serialised transfer slots, not one).
+
+    At the paper's 64 B actions the per-action transfer is ~5 us against
+    millisecond service times, so the FIFO pins match the seed values —
+    the fix matters for fat actions (asserted in tests/test_fleet.py) —
+    while the batched pin is now exact rather than understated.
+    """
+    def fifo_max(svc):
+        return QueueSim(service_time_s=svc, uplink=shaped(100),
+                        payload_bytes=10_000, rate_hz=10.0,
+                        horizon_s=5.0).max_clients(p95_budget_s=0.1,
+                                                   n_max=128)
+    assert [fifo_max(s) for s in (0.002, 0.004, 0.008, 0.016, 0.032)] \
+        == [50, 25, 12, 6, 3]
+    model = BatchServiceModel(((1, 0.008), (2, 0.009), (4, 0.011),
+                               (8, 0.015)))
+    bat = BatchQueueSim(service_time_s=0.008, uplink=shaped(100),
+                        payload_bytes=10_000, rate_hz=10.0, horizon_s=5.0,
+                        max_batch=8, service_model=model)
+    assert bat.max_clients(p95_budget_s=0.1, n_max=256) == 54
 
 
 def test_scalability_split_serves_more_clients():
