@@ -31,9 +31,11 @@ def main(argv=None):
     print(f"training {args.encoder} on {args.task} "
           f"({args.steps} env steps)...")
     result = train(args.task, args.encoder, total_steps=args.steps)
+    s = result.summary()
     print(f"  best={result.best:.1f} mean={result.mean:.1f} "
-          f"final={result.final:.1f} over {len(result.episode_returns)} "
-          f"episodes")
+          f"final={result.final:.1f} over {s['episodes']} episodes "
+          f"({s['episodes_truncated']} truncated) at "
+          f"{result.steps_per_sec:.1f} env-steps/s")
 
     if not args.encoder.startswith("miniconv"):
         print("full_cnn has no split deployment; done.")
@@ -45,14 +47,18 @@ def main(argv=None):
     cfg = DeploymentConfig.from_encoder_name(args.encoder, c_in=9, h=84,
                                              backend="xla")
     dep = Deployment.build(cfg)
-    params = dep.init(jax.random.PRNGKey(0))
     env = make_pixel_env(args.task, train=False)
     _, obs = env.reset(jax.random.PRNGKey(1))
     obs = obs[None]                       # the client serves one frame
 
-    client = dep.client(params)
-    # feats.mean() stands in for the policy head after the projection
-    server_fn = dep.server_fn(params, head=lambda z: z.mean())
+    # serve the TRAINED parameters straight from the manifest: the
+    # Deployment accepts TrainResult.params (its "encoder" entry is the
+    # edge/server split), and the agent's policy_head is the served head
+    from repro.rl.agent import make_agent
+    agent = make_agent(result.algo, dep.encoder, env.action_dim)
+    client = dep.client(result.params)
+    server_fn = dep.server_fn(result.params,
+                              head=agent.policy_head(result.params))
 
     j = client.measure(obs)
     srv = PolicyServer(server_fn).measure(client.encode_fn(obs))

@@ -352,15 +352,25 @@ class Deployment:
         return self.config.in_h * self.config.in_w * (-(-c // 4) * 4)
 
     # ---- served pipeline ---------------------------------------------------
+    @staticmethod
+    def _split_params(params):
+        """Accept either the encoder split ({"edge", "server"}) or a full
+        TRAINED parameter pytree (``TrainResult.params`` /
+        ``TrainState.params``, whose ``"encoder"`` entry is that split) —
+        so a training run serves from the manifest with no repacking."""
+        if "edge" not in params and "encoder" in params:
+            return params["encoder"]
+        return params
+
     def edge_fn(self, params) -> Callable:
         """Jitted on-device half: obs -> wire payload."""
-        edge_params = params["edge"]
+        edge_params = self._split_params(params)["edge"]
         return jax.jit(lambda obs: self.split.edge_step(edge_params, obs))
 
     def server_fn(self, params, head: Optional[Callable] = None) -> Callable:
         """Jitted remote half: payload -> features (or actions via
         ``head``, e.g. a policy MLP applied after the projection)."""
-        server_params = params["server"]
+        server_params = self._split_params(params)["server"]
 
         def fn(payload):
             z = self.split.server_step(server_params, payload)
@@ -370,7 +380,7 @@ class Deployment:
     def server_batch_fn(self, params,
                         head: Optional[Callable] = None) -> Callable:
         """Jitted micro-batched remote half: stacked payload -> actions."""
-        server_params = params["server"]
+        server_params = self._split_params(params)["server"]
 
         def fn(payload_batch):
             z = self.split.server_step_batch(server_params, payload_batch)

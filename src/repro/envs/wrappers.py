@@ -81,6 +81,16 @@ class PixelEnv:
         new = PixelEnvState(inner, frames, k_next, ep_ret, steps)
         return new, _obs(frames), reward, done
 
+    # -- batched (vectorised-env) API ---------------------------------------
+    def reset_batch(self, keys):
+        """Vectorised reset: (N, 2) keys -> (states, (N, H, W, C) obs)."""
+        return jax.vmap(self.reset)(keys)
+
+    def step_batch(self, states, actions):
+        """Vectorised step over the leading env axis (jit/scan friendly):
+        (states, (N, A)) -> (states, (N, H, W, C) obs, (N,) r, (N,) done)."""
+        return jax.vmap(self.step)(states, actions)
+
     # -- deployment boundary -------------------------------------------------
     @staticmethod
     def to_rgba_uint8(obs):

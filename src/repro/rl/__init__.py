@@ -1,5 +1,47 @@
-"""RL substrate: PPO / SAC / DDPG with swappable observation encoders."""
+"""RL substrate: PPO / SAC / DDPG with swappable observation encoders.
 
+One protocol, one driver: every algorithm is a frozen
+:class:`~repro.rl.agent.Agent` bundle (``init`` / ``act`` / ``update`` /
+``target_update`` + config), executed by a compiled
+:class:`~repro.rl.rollout.Engine`, driven by the single generic
+:func:`~repro.rl.train.train` loop — the paper's three (task, algorithm)
+pairings differ only in which bundle ``make_agent`` returns::
+
+    from repro.rl import train
+    res = train("hopper", "miniconv4", total_steps=20_000)   # SAC, 4 envs
+    res.params                       # trained pytree, ready to serve
+    res.summary()                    # best/mean/final + steps/sec
+
+Module map
+----------
+``agent``
+    The uniform protocol: :class:`Agent` (frozen bundle), ``TrainState``
+    (params / target / opt_state pytree) and :func:`make_agent` dispatch.
+``ppo`` / ``sac`` / ``ddpg``
+    The three algorithms as ``Agent`` factories (``make_ppo_agent``, ...).
+    Losses and update math only — no training loops here.
+``rollout``
+    The compiled engines.  On-policy: scan-rollout + whole-trajectory
+    update per jitted call.  Off-policy: ``run_chunk`` scans vectorised
+    env steps with replay inserts and ``train_freq * n_envs`` gradient
+    updates interleaved ON DEVICE, donated carry, jax-PRNG warmup; only
+    (T, N) reward/done arrays come back to the host.
+``buffers``
+    :class:`DeviceReplayBuffer` — pytree ring buffer (uint8 storage,
+    ``lax.dynamic_update_slice`` insert, uniform sampling inside jit) —
+    plus the host-side numpy :class:`ReplayBuffer` kept as the parity
+    reference for the property tests.
+``networks``
+    Encoders (Full-CNN baseline, MiniConv via ``Deployment.build``) and
+    the shared actor/critic heads.
+``train``
+    The generic driver: ``TASK_ALGO`` pairings, episode tracking with
+    explicit end-of-training truncation counting, and
+    :class:`TrainResult` (best/mean/final, throughput, trained params).
+"""
+
+from repro.rl.agent import Agent, TrainState, make_agent
 from repro.rl.train import TASK_ALGO, TrainResult, train
 
-__all__ = ["train", "TrainResult", "TASK_ALGO"]
+__all__ = ["train", "TrainResult", "TASK_ALGO", "Agent", "TrainState",
+           "make_agent"]

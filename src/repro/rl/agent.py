@@ -1,0 +1,106 @@
+"""The unified Agent interface: ONE protocol for PPO / SAC / DDPG.
+
+Every algorithm in the RL stack is packaged as a frozen :class:`Agent`
+bundle — ``init`` / ``act`` / ``update`` / ``target_update`` plus its
+config — so the training driver (``repro.rl.train``), the rollout engines
+(``repro.rl.rollout``) and the deployment path (``repro.deploy``) never
+branch on the algorithm name.  The same ``act``/``policy_head`` pair that
+drives training rollouts serves the trained policy from a deployment
+manifest, which is what keeps the train and serve paths from drifting
+apart (the LExCI-style "one agent interface" argument).
+
+Contract
+--------
+``init(key) -> TrainState``
+    Fresh parameters, target parameters (``{}`` for on-policy agents) and
+    optimizer state.
+``act(params, obs, key) -> (action, extras)``
+    The EXPLORATION policy, batched over a leading env axis: actions for a
+    ``(N, H, W, C)`` observation stack.  ``extras`` is an algo-specific
+    dict of per-step quantities an on-policy update needs stored in the
+    trajectory (PPO: ``logp``/``value``); off-policy agents return ``{}``.
+``update(state, data, key) -> (state, metrics)``
+    One learning step.  Off-policy: ``data`` is a replay minibatch
+    (``obs``/``actions``/``rewards``/``next_obs``/``dones``).  On-policy:
+    ``data`` is ``{"traj": ..., "last_obs": ...}`` — the whole scanned
+    rollout.  Pure (jit-safe): the engines scan it on device.
+``target_update(state) -> state``
+    Polyak/EMA target step, identity for agents without targets.
+``policy_head(params) -> (feats -> action)``
+    The deterministic serving-time policy applied AFTER the encoder —
+    exactly the ``head`` a :class:`repro.deploy.Deployment` server mounts
+    behind the projection, so a trained ``TrainState`` serves from a
+    manifest with no algorithm-specific glue.
+
+All three bundles are constructed by :func:`make_agent`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+from repro.rl.networks import Encoder
+
+
+class TrainState(NamedTuple):
+    """The complete learnable state — a pytree the engines carry on device.
+
+    ``target`` is ``{}`` for agents without target networks (PPO).
+    """
+
+    params: Any
+    target: Any
+    opt_state: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Agent:
+    """Frozen bundle of one RL algorithm behind the uniform protocol."""
+
+    name: str                     # "ppo" | "sac" | "ddpg"
+    cfg: Any                      # the algorithm's config dataclass
+    encoder: Encoder
+    action_dim: int
+    on_policy: bool
+    init: Callable                # (key) -> TrainState
+    act: Callable                 # (params, obs, key) -> (action, extras)
+    update: Callable              # (state, data, key) -> (state, metrics)
+    target_update: Callable       # (state) -> state
+    policy_head: Callable         # (params) -> (feats -> action)
+
+    @property
+    def n_envs(self) -> int:
+        return self.cfg.n_envs
+
+
+def _algorithms() -> dict:
+    """algo name -> (ConfigCls, agent factory).  Imported lazily so
+    agent.py stays free of the algorithm modules until one is used."""
+    from repro.rl.ddpg import DDPGConfig, make_ddpg_agent
+    from repro.rl.ppo import PPOConfig, make_ppo_agent
+    from repro.rl.sac import SACConfig, make_sac_agent
+    return {"ppo": (PPOConfig, make_ppo_agent),
+            "sac": (SACConfig, make_sac_agent),
+            "ddpg": (DDPGConfig, make_ddpg_agent)}
+
+
+def make_agent(algo: str, encoder: Encoder, action_dim: int, *,
+               cfg: Any = None, n_envs: int | None = None) -> Agent:
+    """Construct the :class:`Agent` bundle for ``algo``.
+
+    ``cfg`` overrides the algorithm's default config; ``n_envs`` (when
+    given) overrides just the parallel-env count on top of whichever
+    config is in effect.
+    """
+    algorithms = _algorithms()
+    if algo not in algorithms:
+        raise ValueError(f"unknown algorithm {algo!r}; one of: "
+                         f"{', '.join(algorithms)}")
+    config_cls, factory = algorithms[algo]
+    cfg = cfg or config_cls()
+    if n_envs is not None:
+        cfg = dataclasses.replace(cfg, n_envs=n_envs)
+    return factory(encoder, action_dim, cfg)
+
+
+__all__ = ["Agent", "TrainState", "make_agent"]

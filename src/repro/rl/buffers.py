@@ -1,10 +1,38 @@
-"""Replay buffer (SAC/DDPG) with uint8 pixel storage (host-side numpy)."""
+"""Replay buffers for the off-policy algorithms (SAC/DDPG).
+
+Two implementations with matching semantics:
+
+* :class:`ReplayBuffer` — the original host-side numpy buffer.  Kept as
+  the PARITY REFERENCE: the hypothesis property tests assert the device
+  buffer's insert / wraparound / sampling behaviour against it.
+* :class:`DeviceReplayBuffer` — a device-resident pytree ring buffer.
+  Storage lives in ``jnp`` arrays (uint8 pixels, like the numpy buffer),
+  inserts are ``lax.dynamic_update_slice`` writes and sampling happens
+  INSIDE jit, so the fully-compiled off-policy engine
+  (``repro.rl.rollout``) never round-trips transitions through the host.
+  The buffer rides in the engine's donated scan carry, so updates are
+  in-place on device.
+
+The device ring is fixed-width: every ``add`` call inserts the same
+number of rows ``n_add`` (the engine's ``n_envs``), and ``capacity`` must
+be a multiple of it.  That invariant keeps the write cursor aligned —
+an insert never straddles the wrap boundary — which is what makes the
+single ``dynamic_update_slice`` exact (and cheap) under jit.
+"""
 from __future__ import annotations
 
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 
 class ReplayBuffer:
+    """Host-side numpy buffer with uint8 pixel storage (the reference)."""
+
     def __init__(self, capacity: int, obs_shape: tuple, action_dim: int,
                  seed: int = 0):
         self.capacity = capacity
@@ -61,3 +89,137 @@ class ReplayBuffer:
             out["obs_feats"], out["next_obs_feats"] = \
                 feats[:batch], feats[batch:]
         return out
+
+
+# ---------------------------------------------------------------------------
+# Device-resident pytree ring buffer
+# ---------------------------------------------------------------------------
+
+def _register(cls):
+    return jax.tree_util.register_dataclass(
+        cls,
+        data_fields=["obs", "next_obs", "actions", "rewards", "dones",
+                     "idx", "size"],
+        meta_fields=["n_add"])
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class DeviceReplayBuffer:
+    """jnp ring buffer; a pytree, so it scans/donates through jit.
+
+    ``n_add`` (static metadata) is the fixed insert width; ``idx`` /
+    ``size`` are traced scalars.  Construct with :func:`device_buffer`.
+    """
+
+    obs: Any                      # (capacity, *obs_shape) uint8
+    next_obs: Any                 # (capacity, *obs_shape) uint8
+    actions: Any                  # (capacity, action_dim) float32
+    rewards: Any                  # (capacity,) float32
+    dones: Any                    # (capacity,) float32
+    idx: Any                      # () int32 — next write cursor
+    size: Any                     # () int32 — filled rows
+    n_add: int                    # static fixed insert width
+
+    @property
+    def capacity(self) -> int:
+        return self.obs.shape[0]
+
+
+def device_buffer(capacity: int, obs_shape: tuple, action_dim: int, *,
+                  n_add: int = 1) -> DeviceReplayBuffer:
+    """Allocate an empty device ring accepting ``n_add``-row inserts."""
+    if capacity % n_add != 0:
+        raise ValueError(f"capacity {capacity} must be a multiple of the "
+                         f"insert width n_add={n_add} (keeps the write "
+                         f"cursor slice-aligned)")
+    return DeviceReplayBuffer(
+        obs=jnp.zeros((capacity,) + tuple(obs_shape), jnp.uint8),
+        next_obs=jnp.zeros((capacity,) + tuple(obs_shape), jnp.uint8),
+        actions=jnp.zeros((capacity, action_dim), jnp.float32),
+        rewards=jnp.zeros((capacity,), jnp.float32),
+        dones=jnp.zeros((capacity,), jnp.float32),
+        idx=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+        n_add=n_add)
+
+
+def quantize_obs(obs):
+    """Float [0,1] pixels -> uint8 ring storage (matches the numpy
+    reference's ``ReplayBuffer._quantize``)."""
+    return jnp.clip(jnp.round(obs * 255), 0, 255).astype(jnp.uint8)
+
+
+def buffer_add(buf: DeviceReplayBuffer, obs, action, reward, next_obs,
+               done) -> DeviceReplayBuffer:
+    """Insert ``n_add`` float-pixel transitions at the ring cursor
+    (jit-safe); quantises obs/next_obs to uint8 like the numpy reference.
+    """
+    return buffer_add_u8(buf, quantize_obs(obs), action, reward,
+                         quantize_obs(next_obs), done)
+
+
+def buffer_add_u8(buf: DeviceReplayBuffer, obs_u8, action, reward,
+                  next_obs_u8, done) -> DeviceReplayBuffer:
+    """Insert pre-quantised (uint8) observations.
+
+    The hot path for the compiled engine: consecutive env steps share a
+    frame (``next_obs`` at t IS ``obs`` at t+1), so the engine quantises
+    each frame ONCE and threads the uint8 copy through its carry instead
+    of re-quantising both sides of every transition.
+
+    Because every insert is ``n_add`` rows and capacity is a multiple of
+    ``n_add``, the cursor is always slice-aligned: one
+    ``lax.dynamic_update_slice`` per tensor, never straddling the wrap.
+    """
+    n = obs_u8.shape[0]
+    if n != buf.n_add:
+        raise ValueError(f"insert width {n} != buffer's fixed n_add "
+                         f"{buf.n_add}")
+
+    def put(store, rows):
+        start = (buf.idx,) + (0,) * (store.ndim - 1)
+        return lax.dynamic_update_slice(store, rows.astype(store.dtype),
+                                        start)
+
+    cap = buf.capacity
+    return dataclasses.replace(
+        buf,
+        obs=put(buf.obs, obs_u8),
+        next_obs=put(buf.next_obs, next_obs_u8),
+        actions=put(buf.actions, action),
+        rewards=put(buf.rewards, reward.reshape(n)),
+        dones=put(buf.dones, done.astype(jnp.float32).reshape(n)),
+        idx=(buf.idx + n) % cap,
+        size=jnp.minimum(buf.size + n, cap))
+
+
+def buffer_sample(buf: DeviceReplayBuffer, batch: int, key) -> dict:
+    """Uniform minibatch over the filled region, entirely inside jit.
+
+    Returns the same dict layout as :meth:`ReplayBuffer.sample` (pixels
+    dequantised to float32 in [0, 1]).
+
+    Caveat vs the numpy reference: sampling an EMPTY buffer cannot raise
+    under jit — ``sample_indices`` clamps the range to 1 and the batch
+    comes back all-zero.  Callers must gate sampling on having inserted
+    at least one minibatch (the engine's warmup plan guarantees it).
+    """
+    idxs = sample_indices(key, batch, buf.size)
+    return {
+        "obs": buf.obs[idxs].astype("float32") / 255.0,
+        "next_obs": buf.next_obs[idxs].astype("float32") / 255.0,
+        "actions": buf.actions[idxs],
+        "rewards": buf.rewards[idxs],
+        "dones": buf.dones[idxs],
+    }
+
+
+def sample_indices(key, batch: int, size):
+    """Uniform indices in [0, size) with a traced ``size`` (jit-safe)."""
+    return jax.random.randint(key, (batch,), 0, jnp.maximum(size, 1))
+
+
+__all__ = ["ReplayBuffer", "DeviceReplayBuffer", "device_buffer",
+           "buffer_add", "buffer_add_u8", "buffer_sample", "quantize_obs",
+           "sample_indices"]

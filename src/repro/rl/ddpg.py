@@ -3,6 +3,9 @@
 Deterministic actor with Gaussian exploration noise, single Q critic,
 Polyak target updates — SB3 defaults.  Encoder trained by the critic loss
 (actor gradients stop at the features), as in repro.rl.sac.
+
+Exposed as a frozen :class:`~repro.rl.agent.Agent` bundle
+(:func:`make_ddpg_agent`) for the device-resident off-policy engine.
 """
 from __future__ import annotations
 
@@ -12,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.nn.module import KeyGen
+from repro.rl.agent import Agent, TrainState
 from repro.rl.networks import (Encoder, FEATURE_DIM, det_actor,
                                det_actor_init, q_critic, q_critic_init)
 from repro.train.optimizer import adam, ema_update
@@ -25,7 +29,13 @@ class DDPGConfig:
     batch_size: int = 64
     buffer_size: int = 20_000
     learning_starts: int = 300
+    train_freq: int = 1           # gradient steps per env step (per env)
     action_noise: float = 0.1
+    # parallel envs in the vectorised engine.  Pendulum episodes are a
+    # fixed 200 steps, so smoke-scale runs (512 steps) over many envs
+    # would truncate every episode; 2 envs completes one per env while
+    # still exercising the vectorised path (raise freely at paper scale).
+    n_envs: int = 2
 
 
 def init_ddpg(key, encoder: Encoder, action_dim: int):
@@ -39,8 +49,14 @@ def init_ddpg(key, encoder: Encoder, action_dim: int):
     return params, target
 
 
-def make_ddpg_update(encoder: Encoder, action_dim: int, cfg: DDPGConfig):
+def make_ddpg_agent(encoder: Encoder, action_dim: int,
+                    cfg: DDPGConfig) -> Agent:
+    """DDPG behind the uniform :class:`~repro.rl.agent.Agent` protocol."""
     opt = adam(cfg.lr, clip_norm=10.0)
+
+    def init(key) -> TrainState:
+        params, target = init_ddpg(key, encoder, action_dim)
+        return TrainState(params, target, opt.init(params))
 
     def critic_loss(params, target, batch):
         feats = encoder.apply(params["encoder"], batch["obs"])
@@ -58,21 +74,30 @@ def make_ddpg_update(encoder: Encoder, action_dim: int, cfg: DDPGConfig):
         a = det_actor(params["actor"], feats)
         return -q_critic(params["q"], feats, a).mean()
 
-    @jax.jit
-    def update(params, target, opt_state, batch):
+    def update(state: TrainState, batch, key):
+        params, target, opt_state = state
         closs, cgrads = jax.value_and_grad(critic_loss)(params, target, batch)
         aloss, agrads = jax.value_and_grad(actor_loss)(params, batch)
         grads = jax.tree.map(lambda a, b: a + b, cgrads, agrads)
         params, opt_state = opt.update(params, opt_state, grads)
-        new_target = ema_update(target, params, cfg.tau)
-        return params, new_target, opt_state, {
-            "critic_loss": closs, "actor_loss": aloss}
+        metrics = {"critic_loss": closs, "actor_loss": aloss}
+        return TrainState(params, target, opt_state), metrics
 
-    @jax.jit
+    def target_update(state: TrainState) -> TrainState:
+        return state._replace(target=ema_update(state.target, state.params,
+                                                cfg.tau))
+
     def act(params, obs, key):
         feats = encoder.apply(params["encoder"], obs)
         a = det_actor(params["actor"], feats)
         noise = cfg.action_noise * jax.random.normal(key, a.shape)
-        return jnp.clip(a + noise, -1, 1), a
+        return jnp.clip(a + noise, -1, 1), {}
 
-    return update, act, opt
+    def policy_head(params):
+        actor = params["actor"]
+        return lambda feats: det_actor(actor, feats)
+
+    return Agent(name="ddpg", cfg=cfg, encoder=encoder,
+                 action_dim=action_dim, on_policy=False, init=init, act=act,
+                 update=update, target_update=target_update,
+                 policy_head=policy_head)

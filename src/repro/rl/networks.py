@@ -167,6 +167,14 @@ def squashed_actor_init(key, feat_dim: int, action_dim: int):
                             final_scale=0.01)}
 
 
+def squashed_actor_mode(params, feats):
+    """Deterministic action — tanh of the pre-squash mean.  The policy a
+    deployment serves (``Agent.policy_head``) and the ``det`` output of
+    :func:`squashed_actor_sample`."""
+    mean, _ = jnp.split(mlp_apply(params["mlp"], feats), 2, axis=-1)
+    return jnp.tanh(mean)
+
+
 def squashed_actor_sample(params, feats, key):
     out = mlp_apply(params["mlp"], feats)
     mean, log_std = jnp.split(out, 2, axis=-1)

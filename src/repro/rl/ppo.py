@@ -1,23 +1,29 @@
 """PPO (Schulman et al., 2017) — the paper's Walker2d algorithm.
 
-Fully-jitted vectorised rollout (scan over steps, vmap over envs) + clipped
-surrogate updates with GAE.  Hyperparameters follow SB3 defaults unless
+Clipped surrogate updates with GAE over fully-jitted vectorised rollouts
+(the rollout scan itself lives in ``repro.rl.rollout``; this module is
+the algorithm only).  Hyperparameters follow SB3 defaults unless
 overridden (the paper: "Unless otherwise stated, these settings follow the
 Stable-Baselines3 defaults").
+
+Exposed as a frozen :class:`~repro.rl.agent.Agent` bundle
+(:func:`make_ppo_agent`): ``act`` returns the sampled action plus the
+``logp``/``value`` extras the trajectory stores; ``update`` consumes the
+whole scanned trajectory (``{"traj": ..., "last_obs": ...}``) and runs
+GAE + the epoch/minibatch scan on device.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.envs.wrappers import PixelEnv
-from repro.rl.networks import (Encoder, gaussian_actor, gaussian_actor_init,
-                               v_critic, v_critic_init, FEATURE_DIM)
 from repro.nn.module import KeyGen
+from repro.rl.agent import Agent, TrainState
+from repro.rl.networks import (Encoder, gaussian_actor, gaussian_actor_init,
+                               mlp_apply, v_critic, v_critic_init,
+                               FEATURE_DIM)
 from repro.train.optimizer import adam
 
 
@@ -59,28 +65,19 @@ def _logp(mean, log_std, action):
                     + jnp.log(2 * jnp.pi))).sum(-1)
 
 
-def make_ppo_step(env: PixelEnv, encoder: Encoder, cfg: PPOConfig):
-    """Returns jitted (train_iteration, init_carry)."""
+def make_ppo_agent(encoder: Encoder, action_dim: int,
+                   cfg: PPOConfig) -> Agent:
+    """PPO behind the uniform :class:`~repro.rl.agent.Agent` protocol."""
     opt = adam(cfg.lr, clip_norm=cfg.max_grad_norm)
 
-    def rollout(params, env_states, obs, key):
-        def step(carry, k):
-            env_states, obs = carry
-            mean, log_std, value = _policy(params, encoder, obs)
-            action = mean + jnp.exp(log_std) * jax.random.normal(
-                k, mean.shape)
-            logp = _logp(mean, log_std, action)
-            act_clip = jnp.clip(action, -1.0, 1.0)
-            env_states, next_obs, reward, done = jax.vmap(env.step)(
-                env_states, act_clip)
-            out = dict(obs=obs, action=action, logp=logp, value=value,
-                       reward=reward, done=done)
-            return (env_states, next_obs), out
+    def init(key) -> TrainState:
+        params = init_ppo(key, encoder, action_dim)
+        return TrainState(params, {}, opt.init(params))
 
-        keys = jax.random.split(key, cfg.n_steps)
-        (env_states, obs), traj = jax.lax.scan(step, (env_states, obs), keys)
-        _, _, last_value = _policy(params, encoder, obs)
-        return env_states, obs, traj, last_value
+    def act(params, obs, key):
+        mean, log_std, value = _policy(params, encoder, obs)
+        action = mean + jnp.exp(log_std) * jax.random.normal(key, mean.shape)
+        return action, {"logp": _logp(mean, log_std, action), "value": value}
 
     def gae(traj, last_value):
         def back(carry, t):
@@ -112,7 +109,11 @@ def make_ppo_step(env: PixelEnv, encoder: Encoder, cfg: PPOConfig):
                       "entropy": entropy,
                       "approx_kl": ((ratio - 1) - jnp.log(ratio)).mean()}
 
-    def update(params, opt_state, traj, advs, returns, key):
+    def update(state: TrainState, data, key):
+        params, _, opt_state = state
+        traj, last_obs = data["traj"], data["last_obs"]
+        _, _, last_value = _policy(params, encoder, last_obs)
+        advs, returns = gae(traj, last_value)
         T, N = cfg.n_steps, cfg.n_envs
         flat = {
             "obs": traj["obs"].reshape(T * N, *traj["obs"].shape[2:]),
@@ -130,7 +131,7 @@ def make_ppo_step(env: PixelEnv, encoder: Encoder, cfg: PPOConfig):
             def minibatch(carry, idx):
                 params, opt_state = carry
                 batch = jax.tree.map(lambda x: x[idx], flat)
-                (loss, aux), grads = jax.value_and_grad(
+                (_, aux), grads = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, batch)
                 params, opt_state = opt.update(params, opt_state, grads)
                 return (params, opt_state), aux
@@ -143,25 +144,15 @@ def make_ppo_step(env: PixelEnv, encoder: Encoder, cfg: PPOConfig):
         keys = jax.random.split(key, cfg.n_epochs)
         (params, opt_state), auxs = jax.lax.scan(
             epoch, (params, opt_state), keys)
-        return params, opt_state, jax.tree.map(lambda x: x.mean(), auxs)
-
-    @jax.jit
-    def train_iteration(params, opt_state, env_states, obs, key):
-        k_roll, k_upd = jax.random.split(key)
-        env_states, obs, traj, last_value = rollout(
-            params, env_states, obs, k_roll)
-        advs, returns = gae(traj, last_value)
-        params, opt_state, aux = update(params, opt_state, traj, advs,
-                                        returns, k_upd)
-        metrics = dict(aux)
+        metrics = jax.tree.map(lambda x: x.mean(), auxs)
         metrics["mean_reward"] = traj["reward"].mean()
-        return params, opt_state, env_states, obs, metrics, traj
+        return TrainState(params, {}, opt_state), metrics
 
-    def init_carry(key):
-        kg = KeyGen(key)
-        params = init_ppo(kg(), encoder, env.action_dim)
-        opt_state = opt.init(params)
-        env_states, obs = jax.vmap(env.reset)(kg.split(cfg.n_envs))
-        return params, opt_state, env_states, obs
+    def act_greedy_head(params):
+        actor = params["actor"]
+        return lambda feats: jnp.clip(mlp_apply(actor["mlp"], feats), -1, 1)
 
-    return train_iteration, init_carry
+    return Agent(name="ppo", cfg=cfg, encoder=encoder,
+                 action_dim=action_dim, on_policy=True, init=init, act=act,
+                 update=update, target_update=lambda state: state,
+                 policy_head=act_greedy_head)

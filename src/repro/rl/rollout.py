@@ -1,0 +1,216 @@
+"""Device-resident rollout engines: the fully-jitted training loops.
+
+One engine per agent family, both driven identically by
+``repro.rl.train``:
+
+* **On-policy** (PPO): one jitted call per iteration — ``lax.scan`` over
+  ``n_steps`` env steps vmapped across ``n_envs`` envs, then the agent's
+  whole GAE + epoch/minibatch update, all in one XLA program (this is the
+  engine PPO always had, generalised to any on-policy ``Agent``).
+* **Off-policy** (SAC/DDPG): the RLtools-style compiled loop.  One jitted
+  ``run_chunk`` scans K vectorised env steps, and EVERY step interleaves
+  ``train_freq * n_envs`` gradient updates sampled from the device-resident
+  :class:`~repro.rl.buffers.DeviceReplayBuffer` riding in the scan carry —
+  rollout, replay and learning never leave the device.  Warmup uses a jax
+  PRNG stream (uniform actions) inside the same scan, compiled separately
+  (no per-step host RNG construction).  The carry is donated, so the
+  multi-hundred-MB replay storage is updated in place.
+
+Only the per-chunk ``(T, N)`` reward/done arrays return to the host —
+exactly what episode tracking needs.
+
+Engines expose a uniform driver protocol::
+
+    engine = make_engine(env, agent, total_steps)
+    carry = engine.init(key)
+    for phase in engine.plan():    # ("warmup"|"train"|"iter", n_vec_steps)
+        carry, rewards, dones, metrics = engine.run(carry, key, phase)
+    trained = carry.state          # TrainState
+
+``plan`` splits the construction-time ``total_steps`` budget into
+fixed-shape chunks so at most three XLA programs are compiled per run
+(warmup, full chunk, tail chunk); the budget is baked in at build time
+because the off-policy ring buffer is sized from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.wrappers import PixelEnv
+from repro.rl.agent import Agent, TrainState
+from repro.rl.buffers import (DeviceReplayBuffer, buffer_add_u8,
+                              buffer_sample, device_buffer, quantize_obs)
+
+CHUNK = 128          # max vectorised steps per off-policy run_chunk call
+
+
+class OffPolicyCarry(NamedTuple):
+    state: TrainState
+    buf: DeviceReplayBuffer
+    env_states: Any
+    obs: jnp.ndarray
+    obs_u8: jnp.ndarray          # quantised copy of obs: each frame is
+                                 # quantised ONCE and reused as the next
+                                 # transition's stored observation
+
+
+class OnPolicyCarry(NamedTuple):
+    state: TrainState
+    env_states: Any
+    obs: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """A compiled training loop behind the uniform driver protocol."""
+
+    agent: Agent
+    n_envs: int
+    init: Callable               # (key) -> carry
+    plan: Callable               # () -> [(kind, n_vec_steps)]
+    run: Callable                # (carry, key, phase) -> (carry, r, d, metrics)
+
+
+def make_engine(env: PixelEnv, agent: Agent, total_steps: int) -> Engine:
+    """The matching engine for ``agent`` (dispatches on ``on_policy``)."""
+    if agent.on_policy:
+        return make_onpolicy_engine(env, agent, total_steps)
+    return make_offpolicy_engine(env, agent, total_steps)
+
+
+# ---------------------------------------------------------------------------
+# On-policy: scan-rollout + whole-trajectory update per jitted call
+# ---------------------------------------------------------------------------
+
+def make_onpolicy_engine(env: PixelEnv, agent: Agent,
+                         total_steps: int) -> Engine:
+    cfg = agent.cfg
+    N, T = cfg.n_envs, cfg.n_steps
+
+    def init(key) -> OnPolicyCarry:
+        k_agent, k_env = jax.random.split(key)
+        state = agent.init(k_agent)
+        env_states, obs = env.reset_batch(jax.random.split(k_env, N))
+        return OnPolicyCarry(state, env_states, obs)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run_iter(carry: OnPolicyCarry, key):
+        state, env_states, obs = carry
+        k_roll, k_upd = jax.random.split(key)
+
+        def step(c, k):
+            env_states, obs = c
+            action, extras = agent.act(state.params, obs, k)
+            env_states, next_obs, reward, done = env.step_batch(
+                env_states, jnp.clip(action, -1.0, 1.0))
+            out = dict(obs=obs, action=action, reward=reward, done=done,
+                       **extras)
+            return (env_states, next_obs), out
+
+        (env_states, obs), traj = jax.lax.scan(
+            step, (env_states, obs), jax.random.split(k_roll, T))
+        state, metrics = agent.update(
+            state, {"traj": traj, "last_obs": obs}, k_upd)
+        state = agent.target_update(state)
+        return (OnPolicyCarry(state, env_states, obs),
+                traj["reward"], traj["done"], metrics)
+
+    def plan():
+        return [("iter", T)] * max(total_steps // (T * N), 1)
+
+    def run(carry, key, phase):
+        return run_iter(carry, key)
+
+    return Engine(agent=agent, n_envs=N, init=init, plan=plan, run=run)
+
+
+# ---------------------------------------------------------------------------
+# Off-policy: device ring buffer + interleaved updates inside one scan
+# ---------------------------------------------------------------------------
+
+def make_offpolicy_engine(env: PixelEnv, agent: Agent,
+                          total_steps: int) -> Engine:
+    cfg = agent.cfg
+    N = cfg.n_envs
+    n_updates = cfg.train_freq * N   # keep the seed loop's 1 update/env-step
+    # Random warmup must bank at least one minibatch before updates start.
+    warmup_vec = -(-max(cfg.learning_starts, cfg.batch_size) // N)
+    total_vec = -(-total_steps // N)
+    # Ring sized to the run (never more than cfg.buffer_size), rounded up
+    # to the fixed n_envs insert width the ring requires.
+    cap = min(cfg.buffer_size, total_vec * N)
+    cap = max(cap, cfg.batch_size, N)
+    cap = -(-cap // N) * N
+
+    def init(key) -> OffPolicyCarry:
+        k_agent, k_env = jax.random.split(key)
+        state = agent.init(k_agent)
+        env_states, obs = env.reset_batch(jax.random.split(k_env, N))
+        buf = device_buffer(cap, env.obs_shape, agent.action_dim, n_add=N)
+        return OffPolicyCarry(state, buf, env_states, obs,
+                              quantize_obs(obs))
+
+    @functools.partial(jax.jit, static_argnames=("n_steps", "warmup"),
+                       donate_argnums=(0,))
+    def run_chunk(carry: OffPolicyCarry, key, *, n_steps: int,
+                  warmup: bool):
+        def step(carry, k):
+            state, buf, env_states, obs, obs_u8 = carry
+            k_act, k_upd = jax.random.split(k)
+            if warmup:
+                action = jax.random.uniform(
+                    k_act, (N, agent.action_dim), minval=-1.0, maxval=1.0)
+            else:
+                action, _ = agent.act(state.params, obs, k_act)
+            env_states, next_obs, reward, done = env.step_batch(
+                env_states, jnp.clip(action, -1.0, 1.0))
+            # each frame is quantised once: this step's next_obs IS the
+            # next step's stored obs
+            next_u8 = quantize_obs(next_obs)
+            buf = buffer_add_u8(buf, obs_u8, action, reward, next_u8, done)
+            metrics = {}
+            if not warmup:
+                def upd(state, ku):
+                    k_s, k_u = jax.random.split(ku)
+                    batch = buffer_sample(buf, cfg.batch_size, k_s)
+                    state, m = agent.update(state, batch, k_u)
+                    return agent.target_update(state), m
+
+                state, metrics = jax.lax.scan(
+                    upd, state, jax.random.split(k_upd, n_updates))
+            return (OffPolicyCarry(state, buf, env_states, next_obs,
+                                   next_u8),
+                    (reward, done, metrics))
+
+        carry, (rewards, dones, metrics) = jax.lax.scan(
+            step, carry, jax.random.split(key, n_steps))
+        return carry, rewards, dones, jax.tree.map(
+            lambda x: x.mean(), metrics)
+
+    def plan():
+        # the construction-time budget: warmup sizing and the ring
+        # capacity are derived from it, so plan cannot take a different
+        # one without silently shrinking replay coverage
+        warm = min(warmup_vec, total_vec)
+        remaining = max(total_vec - warm, 0)
+        phases = [("warmup", warm)] if warm else []
+        phases += [("train", CHUNK)] * (remaining // CHUNK)
+        if remaining % CHUNK:
+            phases.append(("train", remaining % CHUNK))
+        return phases
+
+    def run(carry, key, phase):
+        kind, n_steps = phase
+        return run_chunk(carry, key, n_steps=n_steps,
+                         warmup=(kind == "warmup"))
+
+    return Engine(agent=agent, n_envs=N, init=init, plan=plan, run=run)
+
+
+__all__ = ["CHUNK", "Engine", "OffPolicyCarry", "OnPolicyCarry",
+           "make_engine", "make_onpolicy_engine", "make_offpolicy_engine"]

@@ -4,6 +4,10 @@ Twin Q critics, squashed-Gaussian actor, automatic entropy tuning (target
 entropy = -|A|), Polyak target updates.  Pixel convention (DrQ-style, which
 matches SB3's shared feature extractor): the encoder is trained by the
 critic loss; actor gradients stop at the features.
+
+Exposed as a frozen :class:`~repro.rl.agent.Agent` bundle
+(:func:`make_sac_agent`); the device-resident off-policy engine in
+``repro.rl.rollout`` scans its ``update`` on device.
 """
 from __future__ import annotations
 
@@ -13,8 +17,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.nn.module import KeyGen
-from repro.rl.networks import (Encoder, FEATURE_DIM, q_critic, q_critic_init,
-                               squashed_actor_init, squashed_actor_sample)
+from repro.rl.agent import Agent, TrainState
+from repro.rl.networks import (Encoder, FEATURE_DIM, q_critic,
+                               q_critic_init, squashed_actor_init,
+                               squashed_actor_mode, squashed_actor_sample)
 from repro.train.optimizer import adam, ema_update
 
 
@@ -26,8 +32,9 @@ class SACConfig:
     batch_size: int = 64
     buffer_size: int = 20_000
     learning_starts: int = 500
-    train_freq: int = 1           # gradient steps per env step
+    train_freq: int = 1           # gradient steps per env step (per env)
     init_alpha: float = 0.1
+    n_envs: int = 4               # parallel envs in the vectorised engine
 
 
 def init_sac(key, encoder: Encoder, action_dim: int):
@@ -44,9 +51,15 @@ def init_sac(key, encoder: Encoder, action_dim: int):
     return params, jax.tree.map(jnp.copy, target)
 
 
-def make_sac_update(encoder: Encoder, action_dim: int, cfg: SACConfig):
+def make_sac_agent(encoder: Encoder, action_dim: int,
+                   cfg: SACConfig) -> Agent:
+    """SAC behind the uniform :class:`~repro.rl.agent.Agent` protocol."""
     opt = adam(cfg.lr, clip_norm=10.0)
     target_entropy = -float(action_dim)
+
+    def init(key) -> TrainState:
+        params, target = init_sac(key, encoder, action_dim)
+        return TrainState(params, target, opt.init(params))
 
     def critic_loss(params, target, batch, key):
         feats = encoder.apply(params["encoder"], batch["obs"])
@@ -75,29 +88,38 @@ def make_sac_update(encoder: Encoder, action_dim: int, cfg: SACConfig):
                        * jax.lax.stop_gradient(logp + target_entropy)).mean()
         return actor_loss + alpha_loss, (actor_loss, alpha_loss)
 
-    @jax.jit
-    def update(params, target, opt_state, batch, key):
+    def update(state: TrainState, batch, key):
+        params, target, opt_state = state
         k1, k2 = jax.random.split(key)
         closs, cgrads = jax.value_and_grad(critic_loss)(
             params, target, batch, k1)
         # critic grads touch encoder + q1 + q2 (+ log_alpha has zero grad)
-        (aloss_tot, (aloss, alphloss)), agrads = jax.value_and_grad(
+        (_, (aloss, _)), agrads = jax.value_and_grad(
             actor_alpha_loss, has_aux=True)(params, batch, k2)
         grads = jax.tree.map(lambda a, b: a + b, cgrads, agrads)
         params, opt_state = opt.update(params, opt_state, grads)
-        new_target = ema_update(
-            target,
-            {"encoder": params["encoder"], "q1": params["q1"],
-             "q2": params["q2"]},
-            cfg.tau)
-        return params, new_target, opt_state, {
-            "critic_loss": closs, "actor_loss": aloss,
-            "alpha": jnp.exp(params["log_alpha"])}
+        metrics = {"critic_loss": closs, "actor_loss": aloss,
+                   "alpha": jnp.exp(params["log_alpha"])}
+        return TrainState(params, target, opt_state), metrics
 
-    @jax.jit
+    def target_update(state: TrainState) -> TrainState:
+        new_target = ema_update(
+            state.target,
+            {"encoder": state.params["encoder"], "q1": state.params["q1"],
+             "q2": state.params["q2"]},
+            cfg.tau)
+        return state._replace(target=new_target)
+
     def act(params, obs, key):
         feats = encoder.apply(params["encoder"], obs)
         a, _, det = squashed_actor_sample(params["actor"], feats, key)
-        return a, det
+        return a, {}
 
-    return update, act, opt
+    def policy_head(params):
+        actor = params["actor"]
+        return lambda feats: squashed_actor_mode(actor, feats)
+
+    return Agent(name="sac", cfg=cfg, encoder=encoder,
+                 action_dim=action_dim, on_policy=False, init=init, act=act,
+                 update=update, target_update=target_update,
+                 policy_head=policy_head)

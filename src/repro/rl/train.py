@@ -8,26 +8,31 @@ Each condition swaps ONLY the observation encoder (Full-CNN vs MiniConv
 K=4 / K=16), exactly as in the paper; the downstream heads, algorithm and
 hyperparameters are held fixed within a task.
 
+ONE generic driver: the algorithm is a frozen
+:class:`~repro.rl.agent.Agent` bundle and the loop is a compiled
+:class:`~repro.rl.rollout.Engine` — the driver never branches on the
+algorithm.  All three algorithms train vectorised over ``cfg.n_envs``
+parallel envs; off-policy training (SAC/DDPG) runs entirely on device
+(rollout + replay + gradient steps fused in one scan), so only per-chunk
+``(T, N)`` reward/done arrays cross to the host for episode tracking.
+
 Reports Best / Mean / Final (mean over last 100 episodes) per the paper's
-summary statistics.
+summary statistics.  Episodes truncated by the end of training are
+counted explicitly (``truncated_returns``) instead of being silently
+dropped, so episode counts are consistent across engines and ``n_envs``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.envs import make_pixel_env
-from repro.nn.module import KeyGen
-from repro.rl.buffers import ReplayBuffer
-from repro.rl.ddpg import DDPGConfig, init_ddpg, make_ddpg_update
-from repro.rl.networks import make_encoder
-from repro.rl.ppo import PPOConfig, make_ppo_step
-from repro.rl.sac import SACConfig, init_sac, make_sac_update
+from repro.rl.agent import Agent, make_agent
+from repro.rl.rollout import make_engine
 
 TASK_ALGO = {"walker": "ppo", "hopper": "sac", "pendulum": "ddpg"}
 
@@ -45,6 +50,7 @@ def _pipeline_encoder(encoder_name: str, c_in: int, *,
     # lazy: repro.deploy composes rl.networks primitives, so the trainer
     # imports it per call to keep the package import acyclic
     from repro.deploy import Deployment, DeploymentConfig
+    from repro.rl.networks import make_encoder
     if deploy_config is not None:
         return Deployment.build(deploy_config).encoder
     if encoder_name == "full_cnn":
@@ -61,153 +67,127 @@ class TrainResult:
     encoder: str
     episode_returns: list[float]
     wall_time_s: float
+    truncated_returns: list[float] = dataclasses.field(default_factory=list)
+    env_steps: int = 0
+    params: Any = None            # trained parameter pytree (TrainState.params)
+
+    @property
+    def all_returns(self) -> list[float]:
+        """Completed episodes followed by the end-of-training truncated
+        partials (the paper reports per-episode returns; dropping the
+        final partial silently skewed episode counts between engines)."""
+        return self.episode_returns + self.truncated_returns
+
+    @property
+    def _stat_returns(self) -> list[float]:
+        """Best/Mean/Final are the paper's per-EPISODE statistics, so they
+        use completed episodes whenever any exist — a short truncated
+        partial must not become "Best" on a negative-reward task.  Only
+        when a run is too short to complete a single episode (smoke
+        scale) do the truncated partials stand in, keeping the stats
+        finite."""
+        return self.episode_returns or self.truncated_returns
 
     @property
     def best(self) -> float:
-        return max(self.episode_returns) if self.episode_returns else float("nan")
+        r = self._stat_returns
+        return max(r) if r else float("nan")
 
     @property
     def mean(self) -> float:
-        return float(np.mean(self.episode_returns)) if self.episode_returns \
-            else float("nan")
+        r = self._stat_returns
+        return float(np.mean(r)) if r else float("nan")
 
     @property
     def final(self) -> float:
         """Mean episodic return over the final 100 episodes (paper metric)."""
-        if not self.episode_returns:
+        r = self._stat_returns
+        if not r:
             return float("nan")
-        return float(np.mean(self.episode_returns[-100:]))
+        return float(np.mean(r[-100:]))
+
+    @property
+    def steps_per_sec(self) -> float:
+        return self.env_steps / self.wall_time_s if self.wall_time_s > 0 \
+            else float("nan")
 
     def summary(self) -> dict:
         return {"task": self.task, "algo": self.algo, "encoder": self.encoder,
                 "best": self.best, "final": self.final, "mean": self.mean,
-                "episodes": len(self.episode_returns)}
+                "episodes": len(self.all_returns),
+                "episodes_completed": len(self.episode_returns),
+                "episodes_truncated": len(self.truncated_returns),
+                "env_steps": self.env_steps,
+                "steps_per_sec": self.steps_per_sec}
 
 
-def _track_episodes(returns_buf, ep_ret, rewards, dones):
-    """Accumulate per-env episodic returns from (T, N) reward/done arrays."""
+def _track_episodes(returns_buf, ep_ret, ep_len, rewards, dones):
+    """Accumulate per-env episodic returns from (T, N) reward/done arrays.
+
+    ``ep_len`` counts steps since each env's last completed episode so the
+    driver can flush genuinely-started partial episodes at the end of
+    training (:func:`_flush_truncated`) instead of dropping them.
+    """
     rewards = np.asarray(rewards)
     dones = np.asarray(dones)
     for t in range(rewards.shape[0]):
         ep_ret += rewards[t]
+        ep_len += 1
         for i in np.nonzero(dones[t])[0]:
             returns_buf.append(float(ep_ret[i]))
             ep_ret[i] = 0.0
-    return ep_ret
+            ep_len[i] = 0
+    return ep_ret, ep_len
 
 
-def train_ppo(task: str, encoder_name: str, *, total_steps: int = 20_000,
-              seed: int = 0, cfg: Optional[PPOConfig] = None,
-              log_every: int = 10, verbose: bool = False,
-              deploy_config: Optional[DeploymentConfig] = None) -> TrainResult:
-    cfg = cfg or PPOConfig()
-    env = make_pixel_env(task, train=True)
-    encoder = _pipeline_encoder(encoder_name, env.obs_shape[-1],
-                                deploy_config=deploy_config)
-    step_fn, init_carry = make_ppo_step(env, encoder, cfg)
-    params, opt_state, env_states, obs = init_carry(jax.random.PRNGKey(seed))
-
-    returns: list[float] = []
-    ep_ret = np.zeros(cfg.n_envs)
-    t0 = time.time()
-    n_iters = max(total_steps // (cfg.n_steps * cfg.n_envs), 1)
-    key = jax.random.PRNGKey(seed + 1)
-    for it in range(n_iters):
-        key, sub = jax.random.split(key)
-        params, opt_state, env_states, obs, metrics, traj = step_fn(
-            params, opt_state, env_states, obs, sub)
-        ep_ret = _track_episodes(returns, ep_ret, traj["reward"],
-                                 traj["done"])
-        if verbose and it % log_every == 0:
-            print(f"  [ppo {encoder_name}] iter {it} "
-                  f"mean_r={float(metrics['mean_reward']):.3f} "
-                  f"episodes={len(returns)}")
-    return TrainResult(task, "ppo", encoder_name, returns,
-                       time.time() - t0)
-
-
-def _train_offpolicy(task: str, encoder_name: str, algo: str, *,
-                     total_steps: int, seed: int,
-                     cfg, verbose: bool = False,
-                     deploy_config: Optional[DeploymentConfig] = None
-                     ) -> TrainResult:
-    env = make_pixel_env(task, train=True)
-    encoder = _pipeline_encoder(encoder_name, env.obs_shape[-1],
-                                deploy_config=deploy_config)
-    kg = KeyGen(jax.random.PRNGKey(seed))
-
-    if algo == "sac":
-        params, target = init_sac(kg(), encoder, env.action_dim)
-        update, act, opt = make_sac_update(encoder, env.action_dim, cfg)
-    else:
-        params, target = init_ddpg(kg(), encoder, env.action_dim)
-        update, act, opt = make_ddpg_update(encoder, env.action_dim, cfg)
-    opt_state = opt.init(params)
-
-    buf = ReplayBuffer(cfg.buffer_size, env.obs_shape, env.action_dim, seed)
-    reset_jit = jax.jit(env.reset)
-    step_jit = jax.jit(env.step)
-
-    state, obs = reset_jit(kg())
-    returns: list[float] = []
-    ep_ret = 0.0
-    t0 = time.time()
-    for t in range(total_steps):
-        if t < cfg.learning_starts:
-            action = np.random.default_rng(seed + t).uniform(
-                -1, 1, env.action_dim).astype(np.float32)
-            action = jnp.asarray(action)
-        else:
-            if algo == "sac":
-                action, _ = act(params, obs[None], kg())
-            else:
-                action, _ = act(params, obs[None], kg())
-            action = action[0]
-        new_state, next_obs, reward, done = step_jit(state, action)
-        buf.add_batch(np.asarray(obs)[None], np.asarray(action)[None],
-                      np.asarray(reward)[None], np.asarray(next_obs)[None],
-                      np.asarray(done)[None])
-        ep_ret += float(reward)
-        if bool(done):
-            returns.append(ep_ret)
-            ep_ret = 0.0
-        state, obs = new_state, next_obs
-
-        if t >= cfg.learning_starts and len(buf) >= cfg.batch_size:
-            batch = jax.tree.map(jnp.asarray, buf.sample(cfg.batch_size))
-            if algo == "sac":
-                params, target, opt_state, m = update(
-                    params, target, opt_state, batch, kg())
-            else:
-                params, target, opt_state, m = update(
-                    params, target, opt_state, batch)
-            if verbose and t % 500 == 0:
-                print(f"  [{algo} {encoder_name}] step {t} "
-                      + " ".join(f"{k}={float(v):.3f}" for k, v in m.items())
-                      + f" episodes={len(returns)}")
-    return TrainResult(task, algo, encoder_name, returns, time.time() - t0)
+def _flush_truncated(ep_ret, ep_len) -> list[float]:
+    """Partial returns of episodes cut off by the end of training — one per
+    env that has taken at least one step since its last done."""
+    return [float(ep_ret[i]) for i in np.nonzero(ep_len > 0)[0]]
 
 
 def train(task: str, encoder_name: str, *, total_steps: int = 20_000,
-          seed: int = 0, verbose: bool = False,
-          deploy_config: Optional[DeploymentConfig] = None) -> TrainResult:
+          seed: int = 0, verbose: bool = False, log_every: int = 10,
+          cfg: Any = None, n_envs: Optional[int] = None,
+          deploy_config: "Optional[DeploymentConfig]" = None) -> TrainResult:
     """Train the paper's (task, algorithm) pairing with a given encoder.
 
     ``deploy_config`` (optional) trains against an explicit
     :class:`repro.deploy.DeploymentConfig` instead of the named encoder's
     default, so a serialised deployment manifest can drive training too.
+    ``cfg`` overrides the algorithm config; ``n_envs`` overrides just the
+    parallel-env count.  The returned :class:`TrainResult` carries the
+    trained parameters (``result.params``), ready to serve through
+    ``Deployment.serving_pair``.
     """
     algo = TASK_ALGO[task]
-    if algo == "ppo":
-        return train_ppo(task, encoder_name, total_steps=total_steps,
-                         seed=seed, verbose=verbose,
-                         deploy_config=deploy_config)
-    if algo == "sac":
-        return _train_offpolicy(task, encoder_name, "sac",
-                                total_steps=total_steps, seed=seed,
-                                cfg=SACConfig(), verbose=verbose,
+    env = make_pixel_env(task, train=True)
+    encoder = _pipeline_encoder(encoder_name, env.obs_shape[-1],
                                 deploy_config=deploy_config)
-    return _train_offpolicy(task, encoder_name, "ddpg",
-                            total_steps=total_steps, seed=seed,
-                            cfg=DDPGConfig(), verbose=verbose,
-                            deploy_config=deploy_config)
+    agent = make_agent(algo, encoder, env.action_dim, cfg=cfg, n_envs=n_envs)
+    engine = make_engine(env, agent, total_steps)
+
+    key = jax.random.PRNGKey(seed)
+    k_init, key = jax.random.split(key)
+    carry = engine.init(k_init)
+
+    returns: list[float] = []
+    ep_ret = np.zeros(engine.n_envs)
+    ep_len = np.zeros(engine.n_envs, np.int64)
+    env_steps = 0
+    t0 = time.time()
+    for it, phase in enumerate(engine.plan()):
+        key, sub = jax.random.split(key)
+        carry, rewards, dones, metrics = engine.run(carry, sub, phase)
+        ep_ret, ep_len = _track_episodes(returns, ep_ret, ep_len,
+                                         rewards, dones)
+        env_steps += int(np.asarray(rewards).size)
+        if verbose and it % log_every == 0:
+            shown = " ".join(f"{k}={float(v):.3f}"
+                             for k, v in sorted(metrics.items()))
+            print(f"  [{algo} {encoder_name}] {phase[0]} {it} {shown} "
+                  f"episodes={len(returns)}")
+    truncated = _flush_truncated(ep_ret, ep_len)
+    return TrainResult(task, algo, encoder_name, returns,
+                       time.time() - t0, truncated_returns=truncated,
+                       env_steps=env_steps, params=carry.state.params)

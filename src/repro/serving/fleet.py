@@ -36,6 +36,7 @@ Fleet sizing (the capacity-planning questions Table 6 cannot answer):
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import deque
 from typing import Callable, Optional, Sequence, Union
 
@@ -145,6 +146,8 @@ class FleetQueueSim(BatchQueueSim):
         return self.service
 
     # ---- the event-driven engine ------------------------------------------
+    engine: str = "heap"          # "heap" (next-event queue) | "scan" (ref)
+
     def _simulate(self, n_clients: int) -> np.ndarray:
         """Structured per-request trace, in observation order.
 
@@ -153,9 +156,20 @@ class FleetQueueSim(BatchQueueSim):
         interleaved with per-server batch launches — with arrivals at
         time t handled before launches at time t, matching the inclusive
         ``arrival <= launch`` batch-fill rule of ``BatchQueueSim``.
+
+        Two engines compute the identical trace: ``heap`` (default) keeps
+        the pending per-server launches in a lazily-revalidated
+        ``heapq`` next-event queue — O(log S) per event — while ``scan``
+        (the reference) recomputes every server's launch time per event,
+        O(S); the O(events x S) scan dominates wall time past ~32
+        servers.  Bitwise equality of the two engines is asserted in
+        tests/test_fleet.py.
         """
         if self.n_servers < 1:
             raise ValueError(f"n_servers must be >= 1: {self.n_servers}")
+        if self.engine not in ("heap", "scan"):
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"one of: heap, scan")
         route = get_router(self.router)
         arr = self._request_arrivals(n_clients)
         n, S = len(arr), self.n_servers
@@ -190,8 +204,33 @@ class FleetQueueSim(BatchQueueSim):
                                       ready + self.max_wait_s))
             return ready + self.max_wait_s
 
-        while ptr < n or any(n_queued):
-            # earliest pending launch across servers (stable tie-break)
+        # ---- next-launch selection: heap vs scan --------------------------
+        # Heap entries are (launch_time, server).  launch_time(s) only
+        # changes when a request is routed to s or s launches a batch,
+        # and BOTH events push a fresh entry — so the current value is
+        # always present and any entry that disagrees with launch_time(s)
+        # is stale and simply dropped on peek (classic lazy deletion;
+        # re-pushing a correction here instead would duplicate the
+        # current entry per stale and grow the heap quadratically on
+        # saturated servers).  Ties break on the lower server index in
+        # both engines ((t, s) tuple order == the scan's strict-<
+        # first-s-wins).
+        heap: list[tuple[float, int]] = []
+
+        def heap_push(s: int) -> None:
+            if queues[s]:
+                heapq.heappush(heap, (launch_time(s), s))
+
+        def next_launch_heap():
+            while heap:
+                t, s = heap[0]
+                if not queues[s] or launch_time(s) != t:
+                    heapq.heappop(heap)           # stale: drop, the push
+                    continue                      # at the last schedule
+                return s, t                       # change supersedes it
+            return -1, np.inf
+
+        def next_launch_scan():
             best_s, best_launch = -1, np.inf
             for s in range(S):
                 if not queues[s]:
@@ -199,6 +238,13 @@ class FleetQueueSim(BatchQueueSim):
                 launch = launch_time(s)
                 if launch < best_launch:
                     best_s, best_launch = s, launch
+            return best_s, best_launch
+
+        use_heap = self.engine == "heap"
+        next_launch = next_launch_heap if use_heap else next_launch_scan
+
+        while ptr < n or any(n_queued):
+            best_s, best_launch = next_launch()
             if ptr < n and arr[ptr][1] <= best_launch:
                 t_obs, arrival, client = arr[ptr]
                 s = route(client, ptr, arrival, n_queued, free)
@@ -208,6 +254,8 @@ class FleetQueueSim(BatchQueueSim):
                 queues[s].append((t_obs, arrival, ptr))
                 n_queued[s] += 1
                 ptr += 1
+                if use_heap:
+                    heap_push(s)
                 continue
             q = queues[best_s]
             batch = []
@@ -221,6 +269,9 @@ class FleetQueueSim(BatchQueueSim):
             for (t_obs, arrival, idx), r in zip(batch, recv):
                 trace[idx] = (arr[idx][2], best_s, t_obs, arrival, r)
             free[best_s] = done
+            if use_heap:
+                heapq.heappop(heap)               # consume the launch event
+                heap_push(best_s)                 # leftover queue reschedules
         return trace
 
     def trace(self, n_clients: int) -> np.ndarray:

@@ -1,0 +1,217 @@
+"""Unified Agent protocol + device-resident engines (ISSUE 5).
+
+Covers: the Agent bundle contract for all three algorithms; the
+off-policy engine's chunk plan and device loop; the end-of-training
+truncation accounting bugfix (episodes are counted consistently instead
+of silently dropping final partials); and the serve-from-manifest
+round-trip — a TRAINED policy served through EdgeClient -> wire ->
+BatchingPolicyServer matches the in-process policy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs import make_pixel_env
+from repro.rl.agent import Agent, TrainState, make_agent
+from repro.rl.ddpg import DDPGConfig
+from repro.rl.ppo import PPOConfig
+from repro.rl.sac import SACConfig
+from repro.rl.rollout import make_engine
+from repro.rl.train import (TrainResult, _flush_truncated, _track_episodes,
+                            train)
+
+# tiny configs: enough to exercise warmup -> train transitions and at
+# least one interleaved gradient update without heavy compiles
+SMALL = {
+    "sac": SACConfig(batch_size=8, buffer_size=64, learning_starts=8,
+                     n_envs=2),
+    "ddpg": DDPGConfig(batch_size=8, buffer_size=64, learning_starts=8,
+                       n_envs=2),
+    "ppo": PPOConfig(n_envs=2, n_steps=8, n_epochs=1, n_minibatches=2),
+}
+
+
+def _agent(algo, env):
+    from repro.rl.train import _pipeline_encoder
+    enc = _pipeline_encoder("miniconv4", env.obs_shape[-1])
+    return make_agent(algo, enc, env.action_dim, cfg=SMALL[algo])
+
+
+# ------------------------------------------------------------- the protocol
+@pytest.mark.parametrize("algo", ["ppo", "sac", "ddpg"])
+def test_agent_protocol(algo):
+    env = make_pixel_env("pendulum", train=True)
+    agent = _agent(algo, env)
+    assert isinstance(agent, Agent)
+    assert agent.on_policy == (algo == "ppo")
+    state = agent.init(jax.random.PRNGKey(0))
+    assert isinstance(state, TrainState)
+    assert (state.target == {}) == (algo == "ppo")
+    obs = jnp.zeros((3, 84, 84, 9))
+    action, extras = agent.act(state.params, obs, jax.random.PRNGKey(1))
+    assert action.shape == (3, env.action_dim)
+    if algo == "ppo":                       # trajectory extras for the update
+        assert set(extras) == {"logp", "value"}
+        assert extras["value"].shape == (3,)
+    else:
+        assert extras == {}
+    # target_update is pure and type-preserving
+    state2 = agent.target_update(state)
+    assert isinstance(state2, TrainState)
+    # serving head: feats -> deterministic batched action
+    head = agent.policy_head(state.params)
+    a = head(jnp.zeros((5, 512)))
+    assert a.shape == (5, env.action_dim)
+    assert np.isfinite(np.asarray(a)).all()
+
+
+def test_make_agent_rejects_unknown():
+    env = make_pixel_env("pendulum", train=True)
+    from repro.rl.train import _pipeline_encoder
+    enc = _pipeline_encoder("miniconv4", env.obs_shape[-1])
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        make_agent("td3", enc, env.action_dim)
+
+
+# ----------------------------------------------------------------- the plan
+def test_offpolicy_plan_shapes():
+    env = make_pixel_env("pendulum", train=True)
+    agent = _agent("ddpg", env)              # learning_starts=8, n_envs=2
+    plan = make_engine(env, agent, total_steps=40).plan()
+    # 20 vectorised steps: 4 warmup (8 random env steps) + 16 train
+    assert plan[0] == ("warmup", 4)
+    assert all(kind == "train" for kind, _ in plan[1:])
+    assert sum(n for _, n in plan) == 20
+    # budget smaller than warmup: pure random, no train chunks.  The
+    # budget is baked in at construction (the ring is sized from it), so
+    # a different budget means a different engine.
+    assert make_engine(env, agent, total_steps=6).plan() == [("warmup", 3)]
+
+
+def test_onpolicy_plan_shapes():
+    env = make_pixel_env("pendulum", train=True)
+    agent = _agent("ppo", env)               # n_envs=2, n_steps=8
+    assert make_engine(env, agent, total_steps=64).plan() == \
+        [("iter", 8)] * 4
+    assert make_engine(env, agent, total_steps=1).plan() == \
+        [("iter", 8)]                        # at least one iteration
+
+
+# ------------------------------------------------- truncation accounting fix
+def test_track_episodes_counts_dones_and_flushes_partials():
+    """Regression (ISSUE 5 bugfix): the final truncated episode's partial
+    return used to be dropped silently; episodes = completed + flushed
+    partials, and every reward lands in exactly one of them."""
+    rewards = np.array([[1.0, 10.0], [2.0, 20.0], [4.0, 40.0]])
+    dones = np.array([[0, 0], [1, 0], [0, 0]], dtype=bool)
+    returns, ep_ret, ep_len = [], np.zeros(2), np.zeros(2, np.int64)
+    ep_ret, ep_len = _track_episodes(returns, ep_ret, ep_len, rewards, dones)
+    assert returns == [3.0]                      # env 0 finished at t=1
+    truncated = _flush_truncated(ep_ret, ep_len)
+    assert truncated == [4.0, 70.0]              # both partials flushed
+    assert sum(returns) + sum(truncated) == rewards.sum()
+    # an env that JUST finished has nothing to flush
+    assert _flush_truncated(np.zeros(2), np.zeros(2, np.int64)) == []
+
+
+def test_train_result_stats_cover_truncated():
+    res = TrainResult("pendulum", "ddpg", "miniconv4",
+                      episode_returns=[1.0, 2.0], wall_time_s=1.0,
+                      truncated_returns=[5.0], env_steps=30)
+    assert res.all_returns == [1.0, 2.0, 5.0]
+    # Best/Mean/Final stay the paper's per-episode stats: a short partial
+    # must not become "Best" — completed episodes win when any exist
+    assert res.best == 2.0 and res.mean == pytest.approx(1.5)
+    s = res.summary()
+    assert s["episodes"] == 3 and s["episodes_truncated"] == 1
+    assert s["steps_per_sec"] == pytest.approx(30.0)
+    # smoke scale: nothing completed -> truncated partials keep stats finite
+    only_trunc = TrainResult("pendulum", "ddpg", "miniconv4", [], 1.0,
+                             truncated_returns=[5.0])
+    assert only_trunc.best == 5.0 and only_trunc.mean == 5.0
+    # no episodes at all -> stats are NaN but summary stays well-formed
+    empty = TrainResult("pendulum", "ddpg", "miniconv4", [], 1.0)
+    assert np.isnan(empty.best) and empty.summary()["episodes"] == 0
+
+
+@pytest.mark.slow
+def test_truncated_episodes_reported_at_smoke_scale():
+    """At 64 steps over 2 envs no pendulum episode (200 steps) can finish:
+    the seed loop reported episodes=0 here; the fixed accounting reports
+    one truncated partial per env."""
+    res = train("pendulum", "miniconv4", total_steps=64,
+                cfg=SMALL["ddpg"])
+    assert res.episode_returns == []
+    assert len(res.truncated_returns) == 2
+    assert res.summary()["episodes"] == 2
+    assert np.isfinite(res.mean) and np.isfinite(res.best)
+    assert res.env_steps == 64
+
+
+# ------------------------------------------------------- engines end-to-end
+@pytest.mark.slow
+@pytest.mark.parametrize("task,algo", [("pendulum", "ddpg"),
+                                       ("hopper", "sac")])
+def test_offpolicy_engine_trains_on_device(task, algo):
+    """Warmup + interleaved device updates produce finite parameters,
+    per-chunk (T, N) reward/done arrays and a served-ready TrainState."""
+    res = train(task, "miniconv4", total_steps=48, cfg=SMALL[algo], seed=1)
+    assert res.algo == algo
+    assert res.env_steps == 48
+    assert res.summary()["episodes"] >= 2     # >= one partial per env
+    assert np.isfinite(res.mean)
+    assert res.params is not None
+    flat = jax.tree.leaves(res.params)
+    assert flat and all(np.isfinite(np.asarray(x)).all() for x in flat)
+
+
+@pytest.mark.slow
+def test_onpolicy_engine_trains():
+    res = train("walker", "miniconv4", total_steps=32, cfg=SMALL["ppo"],
+                seed=1)
+    assert res.algo == "ppo" and res.env_steps == 32   # two (8, 2) iters
+    assert np.isfinite(res.mean)
+    assert res.params is not None
+
+
+# --------------------------------------------- serve-from-manifest roundtrip
+@pytest.mark.slow
+def test_trained_policy_serves_from_manifest():
+    """ISSUE 5 satellite (closes PR 3's 'serve the trained policy from one
+    manifest'): train(deploy_config=...) -> TrainResult.params ->
+    Deployment.serving_pair; the EdgeClient -> wire -> BatchingPolicyServer
+    action equals the in-process policy on the same observation."""
+    from repro.deploy import Deployment, DeploymentConfig
+    cfg = DeploymentConfig.from_encoder_name("miniconv4", c_in=9,
+                                             backend="xla")
+    res = train("pendulum", "miniconv4", total_steps=16, cfg=SMALL["ddpg"],
+                deploy_config=cfg, seed=3)
+    dep = Deployment.build(cfg)
+    agent = make_agent("ddpg", dep.encoder, 1, cfg=SMALL["ddpg"])
+    head = agent.policy_head(res.params)
+
+    env = make_pixel_env("pendulum", train=False)
+    _, obs = env.reset(jax.random.PRNGKey(0))
+    obs = obs[None]
+
+    # served: one manifest, trained params, full wire path
+    client, server = dep.serving_pair(res.params, head=head)
+    payload = client.encode_fn(obs)
+    served = np.asarray(server.serve([payload])[0])
+
+    # in-process, quantisation-aware: same math as the served path (the
+    # batched server step may differ by float ulps under jit)
+    enc_params = res.params["encoder"]
+    feats = dep.split.server_step(enc_params["server"],
+                                  dep.split.edge_step(enc_params["edge"],
+                                                      obs))
+    inproc = np.asarray(head(feats)[0])
+    np.testing.assert_allclose(served, inproc, rtol=1e-5, atol=1e-6)
+
+    # and close to the float (no-wire) policy: only uint8 feature
+    # quantisation separates them
+    float_feats = dep.encoder.apply(enc_params, obs)
+    float_action = np.asarray(head(float_feats)[0])
+    np.testing.assert_allclose(served, float_action, atol=0.25)
+    assert served.shape == (1,) and np.isfinite(served).all()

@@ -245,6 +245,75 @@ def test_max_clients_early_exits_when_over_budget_at_one():
     assert calls == [1]                    # ONE sim, not n_max scans
 
 
+# ------------------------------------------------------------- heap engine
+@pytest.mark.parametrize("router", ["round_robin", "least_loaded",
+                                    "client_affinity"])
+@pytest.mark.parametrize("max_wait_s", [0.0, 0.002, 1.0])
+def test_heap_engine_bitwise_equals_scan(router, max_wait_s):
+    """The heapq next-event engine reproduces the O(events x n_servers)
+    launch-scan reference BITWISE across the router x max_wait grid."""
+    common = dict(service_time_s=0.008, payload_bytes=10_000,
+                  horizon_s=5.0, max_batch=8, max_wait_s=max_wait_s,
+                  service_model=MODEL, router=router)
+    for n_servers in (1, 3, 8):
+        heap = FleetQueueSim(uplink=shaped(100), n_servers=n_servers,
+                             engine="heap", **common)
+        scan = dataclasses.replace(heap, engine="scan")
+        np.testing.assert_array_equal(heap.latencies(24), scan.latencies(24))
+
+
+def test_heap_engine_bitwise_on_heterogeneous_fleet():
+    """Per-server t(B) curves exercise server-dependent launch times."""
+    slow = BatchServiceModel(((1, 0.060), (8, 0.070)))
+    fast = BatchServiceModel(((1, 0.002), (8, 0.003)))
+    for router in router_names():
+        heap = _fleet(n_servers=4, router=router, max_batch=8,
+                      max_wait_s=0.01,
+                      service_models=(fast, slow, fast, slow),
+                      horizon_s=3.0)
+        scan = dataclasses.replace(heap, engine="scan")
+        np.testing.assert_array_equal(heap.latencies(17), scan.latencies(17))
+
+
+def test_heap_engine_default_and_validated():
+    assert _fleet().engine == "heap"
+    with pytest.raises(ValueError, match="unknown engine"):
+        dataclasses.replace(_fleet(), engine="btree").latencies(2)
+
+
+def test_heap_engine_saturated_single_server_is_linear():
+    """Regression: the lazy-deletion peek must DROP stale entries, not
+    re-push corrections — re-pushing duplicated the current entry per
+    stale and made a saturated server's heap grow per launch (observed
+    500x slowdown vs the scan at n=2048).  Saturation = arrivals far
+    outpace service, the regime fleet capacity searches probe."""
+    import time
+    model = BatchServiceModel(((1, 0.00012), (8, 0.00051)))
+    sim = _fleet(service_time_s=0.00012, uplink=shaped(1000),
+                 payload_bytes=492, horizon_s=2.0, max_batch=8,
+                 service_model=model, n_servers=1)
+    t0 = time.perf_counter()
+    lat = sim.latencies(1024)
+    elapsed = time.perf_counter() - t0
+    np.testing.assert_array_equal(
+        lat, dataclasses.replace(sim, engine="scan").latencies(1024))
+    assert elapsed < 30.0, f"saturated heap sim took {elapsed:.1f}s"
+
+
+def test_heap_engine_32_server_smoke():
+    """A >= 32-server fleet completes fast — the regime where the launch
+    scan's O(events x n_servers) inner loop used to dominate."""
+    import time
+    sim = _fleet(service_time_s=0.002, payload_bytes=2_000, horizon_s=2.0,
+                 max_batch=8, service_model=MODEL, n_servers=32,
+                 router="least_loaded")
+    t0 = time.perf_counter()
+    lat = sim.latencies(512)
+    elapsed = time.perf_counter() - t0
+    assert len(lat) > 0 and np.isfinite(lat).all()
+    assert elapsed < 10.0, f"32-server sim took {elapsed:.1f}s"
+
+
 # ----------------------------------------------------------------- manifest
 def test_manifest_roundtrip_fleet_fields():
     from repro.deploy import DeploymentConfig
