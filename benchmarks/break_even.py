@@ -6,11 +6,21 @@ simulated pipeline (the "modeling twist").
 Checks (a) the paper's Pi-Zero number (~50.4 Mb/s), (b) that the netsim
 crossover lands at the predicted B* for a sweep of configurations, and
 (c) the pod-boundary generalisation for the assigned LLMs.
+
+``--manifest DEPLOY.json`` derives the :class:`SplitConfig` from a real
+deployment manifest instead of hand-picked constants — X and the
+stride-2 count come from the manifest's spec/plan, and the encode time
+``j`` is *measured* on this host from the built deployment's edge path
+(tuning block honoured), so the break-even number answers "at what
+bandwidth does THIS deployment stop paying for itself".
 """
 from __future__ import annotations
 
 import argparse
+import json
+import time
 
+import jax
 import numpy as np
 
 from repro.configs import ARCHS
@@ -39,6 +49,49 @@ def crossover_mbps(cfg: SplitConfig, *, lo=1e5, hi=1e10) -> float:
         else:
             hi = mid
     return mid / 1e6
+
+
+def split_config_from_manifest(path: str, *, encode_time_s=None,
+                               n_time: int = 16):
+    """SplitConfig for a deployment manifest: geometry from the spec,
+    encode time measured on the built deployment's edge path."""
+    from repro.deploy import Deployment, DeploymentConfig
+
+    with open(path) as f:
+        cfg = DeploymentConfig.from_dict(json.load(f))
+    dep = Deployment.build(cfg)
+    if encode_time_s is None:
+        edge_params = dep.init(jax.random.PRNGKey(0))["edge"]
+        c_in = cfg.spec.layers[0].c_in
+        x = jax.random.uniform(jax.random.PRNGKey(1),
+                               (1, cfg.in_h, cfg.in_w, c_in))
+        fn = lambda xx: dep.split.edge_apply(edge_params, xx)
+        for _ in range(3):
+            jax.block_until_ready(fn(x))
+        ts = []
+        for _ in range(n_time):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            ts.append(time.perf_counter() - t0)
+        encode_time_s = float(np.median(ts))
+    n_stride2 = sum(1 for layer in cfg.spec.layers if layer.stride == 2)
+    return SplitConfig(x_size=cfg.in_h, n_stride2=n_stride2,
+                       k_channels=cfg.spec.layers[-1].c_out,
+                       encode_time_s=encode_time_s), dep
+
+
+def run_manifest(path: str):
+    cfg, dep = split_config_from_manifest(path)
+    pred = break_even_bandwidth(cfg) / 1e6
+    sim = crossover_mbps(cfg)
+    print(f"  manifest {path} [{dep.backend.name}]: X={cfg.x_size} "
+          f"n={cfg.n_stride2} K={cfg.k_channels} "
+          f"j={cfg.encode_time_s * 1e3:.3f}ms (measured)")
+    print(f"  predicted B*={pred:.2f} Mb/s, simulated crossover="
+          f"{sim:.2f} Mb/s")
+    assert abs(pred - sim) / pred < 0.02, \
+        "equation disagrees with simulation"
+    return {"config": path, "pred": pred, "sim": sim}
 
 
 def run():
@@ -73,8 +126,16 @@ def run():
 
 
 def main(argv=None):
-    argparse.ArgumentParser(description=__doc__).parse_args(argv)
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--manifest", metavar="DEPLOY.json",
+                    help="derive the split config (and measure j) from "
+                         "this deployment manifest instead of the paper "
+                         "constants sweep")
+    args = ap.parse_args(argv)
+    if args.manifest:
+        run_manifest(args.manifest)
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import perfstamp
 from repro.rl.agent import make_agent
 from repro.rl.buffers import ReplayBuffer
 from repro.rl.rollout import make_engine
@@ -226,14 +227,14 @@ def compare_offpolicy(task: str = "pendulum", encoder: str = "miniconv4", *,
 
 def write_bench(rows, *, total_steps: int, compare_row=None,
                 path: str = BENCH_PATH) -> dict:
-    doc = {
+    doc = perfstamp.stamp({
         "benchmark": "learning",
-        "host": {"platform": platform.platform(),
-                 "backend": jax.default_backend()},
+        "host_detail": {"platform": platform.platform(),
+                        "backend": jax.default_backend()},
         "total_steps": total_steps,
         "conditions": [r.summary() | {"wall_time_s": r.wall_time_s}
                        for r in rows],
-    }
+    }, backend=jax.default_backend())
     if compare_row is not None:
         doc["offpolicy_throughput"] = compare_row
     Path(path).write_text(json.dumps(doc, indent=2))

@@ -1,5 +1,34 @@
 """Core: the paper's contribution — MiniConv encoders, the split-policy
-architecture, wire codecs, and the decision-latency model."""
+architecture, wire codecs, and the decision-latency model.
+
+Module map
+----------
+``miniconv``
+    MiniConv specs under the fragment-shader budget (``MiniConvSpec`` /
+    ``ShaderBudget``) and the reference ``miniconv_apply`` dispatcher
+    over the backend registry.
+``passplan``
+    The PassPlan IR: every shape, pad, FLOP and byte of the shader-pass
+    schedule, plus the batch-aware VMEM model (``vmem_bytes`` /
+    ``max_safe_batch`` / ``check_batch``) the kernels and the tuner
+    both price against.
+``backends``
+    The execution-backend registry (``xla`` / ``reference`` /
+    ``grouped`` / ``fused`` / ``fused+head`` / ``fused+stream``) that
+    ``Deployment.build`` and the tuner enumerate.
+``tuning``
+    The per-manifest autotuner: candidate enumeration over
+    (backend, tile_h, micro-batch), PassPlan-derived cost-model pruning,
+    live-kernel measurement, and the frozen ``TunedPlan`` that ships in
+    the deployment manifest.
+``split``
+    The edge/server split model with the straight-through quantised
+    wire boundary.
+``wire``
+    Wire codecs (uint8 / float16 / ...) and payload accounting.
+``latency``
+    The paper's decision-latency and break-even-bandwidth equations.
+"""
 
 from repro.core.backends import (ExecutionBackend, backend_names,
                                  get_backend, register_backend)
@@ -16,6 +45,9 @@ from repro.core.passplan import (DEFAULT_VMEM_LIMIT, HeadPlan, LayerPlan,
                                  count_passes, out_spatial_chain)
 from repro.core.split import (SplitModel, make_miniconv_split,
                               make_split_policy, straight_through)
+from repro.core.tuning import (Candidate, TunedPlan, default_candidates,
+                               estimated_cost_s, prune_candidates,
+                               suggest_tuning, tune)
 from repro.core.wire import (CODECS, WireCodec, feature_bytes,
                              frame_bytes_rgba, get_codec, roundtrip)
 
@@ -28,6 +60,8 @@ __all__ = [
     "miniconv_init", "standard_spec", "DEFAULT_VMEM_LIMIT", "HeadPlan",
     "LayerPlan", "PassPlan", "ShaderPass", "build_pass_plan", "count_passes",
     "out_spatial_chain", "SplitModel", "make_miniconv_split",
-    "make_split_policy", "straight_through", "CODECS", "WireCodec",
+    "make_split_policy", "straight_through", "Candidate", "TunedPlan",
+    "default_candidates", "estimated_cost_s", "prune_candidates",
+    "suggest_tuning", "tune", "CODECS", "WireCodec",
     "feature_bytes", "frame_bytes_rgba", "get_codec", "roundtrip",
 ]

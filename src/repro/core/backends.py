@@ -24,6 +24,12 @@ Registered backends
     ``fused`` with the server-side projection executed as an in-kernel
     epilogue — encoder + head in a single launch (the batched-serving /
     replay-encoding hot path).
+``fused+stream`` (alias ``fused_stream``)
+    The fused kernel pipelined over batch CHUNKS
+    (:func:`~repro.kernels.miniconv_pass.miniconv_encoder_stream`): lifts
+    the batch-must-fit-VMEM rule (``PassPlan.max_safe_batch``) by
+    streaming ``chunk_b``-frame input blocks HBM->VMEM, double-buffered
+    on compiled TPU, multi-launch split as the portable fallback.
 
 Each backend maps to a ``miniconv_apply`` kernel mode; the legacy
 ``use_kernel=`` strings resolve through this registry, so an unknown name
@@ -49,6 +55,7 @@ class ExecutionBackend:
     name: str
     mode: str                    # miniconv_apply execution tier
     fused_head: bool = False
+    streamed: bool = False       # batch-chunked VMEM streaming (fused only)
     description: str = ""
 
     @property
@@ -126,6 +133,11 @@ register_backend(ExecutionBackend(
     "fused+head", "fused", fused_head=True,
     description="fused kernel with the projection as an in-kernel epilogue"),
     aliases=("fused_head",))
+register_backend(ExecutionBackend(
+    "fused+stream", "fused", fused_head=True, streamed=True,
+    description="fused+head pipelined over batch chunks — streams "
+                "chunk_b-frame blocks HBM->VMEM past max_safe_batch"),
+    aliases=("fused_stream",))
 
 
 __all__ = ["ExecutionBackend", "backend_names", "get_backend",

@@ -186,7 +186,8 @@ def _normalize_mode(use_kernel) -> str:
 
 def miniconv_apply(params, spec: MiniConvSpec, x, *,
                    use_kernel=False, tile_h: int = 8, plan=None,
-                   head=None, head_act: str = "relu", interpret=None):
+                   head=None, head_act: str = "relu", interpret=None,
+                   stream_chunk=None):
     """x: (B, H, W, C_in) float in [0,1] -> (B, H', W', K).
 
     Execution modes (``use_kernel``):
@@ -218,13 +219,24 @@ def miniconv_apply(params, spec: MiniConvSpec, x, *,
     execution for the kernel tiers; ``None`` keeps the environment-derived
     default (interpret off-TPU, compiled on TPU or with
     ``REPRO_PALLAS_COMPILE=1``).
+
+    ``stream_chunk`` (fused tiers only) streams the micro-batch through
+    VMEM in ``stream_chunk``-frame chunks
+    (:func:`~repro.kernels.miniconv_pass.miniconv_encoder_stream`),
+    lifting the batch-must-fit-VMEM cap.  ``use_kernel="fused+stream"``
+    selects streaming with ``stream_chunk`` defaulting to the plan's
+    ``max_safe_batch``; batches within one chunk fall through to the plain
+    fused launch, so results are bitwise identical either way.
     """
-    mode = _normalize_mode(use_kernel)
+    from repro.core.backends import get_backend  # lazy: avoids cycle
+    backend = get_backend(use_kernel)
+    mode = backend.mode
     if head is not None:
         hw, hb = ((head["kernel"], head.get("bias"))
                   if isinstance(head, dict) else head)
     if mode == "fused":
-        from repro.kernels.miniconv_pass import miniconv_encoder
+        from repro.kernels.miniconv_pass import (miniconv_encoder,
+                                                 miniconv_encoder_stream)
         if plan is None:
             plan = spec.plan(x.shape[1], x.shape[2])
         elif (plan.in_h, plan.in_w) != (x.shape[1], x.shape[2]):
@@ -233,6 +245,17 @@ def miniconv_apply(params, spec: MiniConvSpec, x, *,
                 f"{x.shape[1:3]}; rebuild with spec.plan(h, w)")
         ws = [params[f"layer{i}"]["kernel"] for i in range(len(spec.layers))]
         bs = [params[f"layer{i}"]["bias"] for i in range(len(spec.layers))]
+        if backend.streamed and stream_chunk is None:
+            hp = (plan.head(hw.shape[-1], activation=head_act)
+                  if head is not None else None)
+            stream_chunk = max(1, plan.max_safe_batch(head=hp,
+                                                      tile_h=tile_h))
+        if stream_chunk is not None:
+            return miniconv_encoder_stream(
+                x, ws, bs, plan, chunk_b=stream_chunk, tile_h=tile_h,
+                head_w=hw if head is not None else None,
+                head_b=hb if head is not None else None,
+                head_act=head_act, interpret=interpret)
         if head is not None:
             return miniconv_encoder(x, ws, bs, plan, tile_h=tile_h,
                                     head_w=hw, head_b=hb, head_act=head_act,

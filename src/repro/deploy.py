@@ -59,6 +59,7 @@ from repro.core.miniconv import (_ACTS, LayerSpec, MiniConvSpec,
                                  ShaderBudget, miniconv_apply, standard_spec)
 from repro.core.passplan import HeadPlan, PassPlan, build_pass_plan
 from repro.core.split import SplitModel
+from repro.core.tuning import TunedPlan
 from repro.core.wire import CODECS, WireCodec, get_codec
 from repro.nn.layers import dense
 from repro.rl.networks import Encoder, miniconv_encoder_init
@@ -66,7 +67,10 @@ from repro.serving.client import EdgeClient
 from repro.serving.fleet import ROUTERS, FleetQueueSim
 from repro.serving.server import BatchingPolicyServer
 
-CONFIG_VERSION = 1
+# version 2 added the optional ``tuning`` block (a frozen TunedPlan);
+# version-1 manifests load unchanged with ``tuning=None``.
+CONFIG_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +112,13 @@ class DeploymentConfig:
                       ``round_robin`` | ``least_loaded`` |
                       ``client_affinity`` (hash-pinned, keeps one client's
                       requests ordered).
+    tuning          : optional frozen :class:`~repro.core.tuning.TunedPlan`
+                      (``core.tuning.tune`` / ``python -m repro.deploy
+                      --tune``).  When present, :meth:`Deployment.build`
+                      executes with the tuned backend / ``tile_h`` /
+                      micro-batch instead of the fields above — tune once,
+                      freeze into the manifest, every entry point inherits
+                      the tuned kernels.
     """
 
     spec: MiniConvSpec
@@ -125,11 +136,15 @@ class DeploymentConfig:
     quantize_in_train: bool = False
     n_servers: int = 1
     router: str = "round_robin"
+    tuning: Optional[TunedPlan] = None
 
     def __post_init__(self):
         # canonicalise backend aliases (and the legacy use_kernel booleans)
         # at construction so equality and serialisation are name-stable
         object.__setattr__(self, "backend", get_backend(self.backend).name)
+        if isinstance(self.tuning, dict):     # deserialised manifests
+            object.__setattr__(self, "tuning",
+                               TunedPlan.from_dict(self.tuning))
 
     # ---- construction helpers ---------------------------------------------
     @classmethod
@@ -178,6 +193,12 @@ class DeploymentConfig:
         if self.router not in ROUTERS:
             raise ValueError(f"unknown router {self.router!r}; registered: "
                              f"{', '.join(ROUTERS)}")
+        if self.tuning is not None:
+            get_backend(self.tuning.backend)   # raises listing names
+            if self.tuning.tile_h < 1 or self.tuning.micro_batch < 1:
+                raise ValueError(
+                    f"tuning tile_h/micro_batch must be >= 1, got "
+                    f"{self.tuning.tile_h}/{self.tuning.micro_batch}")
         self.spec.validate()
 
     # ---- serialisation -----------------------------------------------------
@@ -188,6 +209,7 @@ class DeploymentConfig:
             "layers": [dataclasses.asdict(l) for l in self.spec.layers],
             "budget": dataclasses.asdict(self.spec.budget),
         }
+        d["tuning"] = None if self.tuning is None else self.tuning.to_dict()
         d["version"] = CONFIG_VERSION
         return d
 
@@ -195,13 +217,16 @@ class DeploymentConfig:
     def from_dict(cls, d: dict) -> "DeploymentConfig":
         d = dict(d)
         version = d.pop("version", CONFIG_VERSION)
-        if version != CONFIG_VERSION:
+        if version not in _READABLE_VERSIONS:
             raise ValueError(f"unsupported manifest version {version} "
-                             f"(this build reads {CONFIG_VERSION})")
+                             f"(this build reads "
+                             f"{', '.join(map(str, _READABLE_VERSIONS))})")
         s = d.pop("spec")
         spec = MiniConvSpec(
             layers=tuple(LayerSpec(**l) for l in s["layers"]),
             budget=ShaderBudget(**s.get("budget", {})))
+        # pre-tuning (version-1) manifests default cleanly to tuning=None;
+        # __post_init__ revives a serialised TunedPlan dict
         return cls(spec=spec, **d)
 
     def to_json(self, **kw) -> str:
@@ -233,29 +258,49 @@ class Deployment:
     split: SplitModel
     encoder: Encoder
     max_safe_batch: int
+    tile_h: int = 8
+    stream_chunk: Optional[int] = None
+    compiled: bool = False
+    build_log: tuple = ()
 
     # ---- the compiler ------------------------------------------------------
     @classmethod
     def build(cls, config: DeploymentConfig) -> "Deployment":
         """Resolve ``config`` into the executable pipeline.
 
-        The PassPlan is lowered and shader-budget-checked once, up front;
-        when the configured backend runs the fused Pallas kernel compiled
+        The PassPlan is lowered and shader-budget-checked once, up front.
+        A manifest ``tuning`` block overrides the executed backend /
+        ``tile_h`` / micro-batch (tune once, serve everywhere).  When the
+        resolved backend runs the fused Pallas kernel compiled
         (``interpret=False``, or ``interpret=None`` resolving to compiled
         on a TPU host / under ``REPRO_PALLAS_COMPILE=1``), the configured
-        micro-batch is additionally validated against the fused kernel's
-        VMEM residency model (:meth:`PassPlan.check_batch`), so an
-        un-launchable deployment fails at build time, not on the device.
+        micro-batch is checked against the fused kernel's VMEM residency
+        model — and an over-budget batch is no longer rejected: it is
+        PIPELINED through :func:`~repro.kernels.miniconv_pass.
+        miniconv_encoder_stream` in ``max_safe_batch``-frame chunks (the
+        decision is recorded in ``build_log``).  Build still fails, with
+        the computed ``max_safe_batch`` and the tuner's suggestion, when
+        even a single frame exceeds the budget.
         """
         config.validate()
         backend = get_backend(config.backend)
+        tile_h = config.tile_h
+        tuning = config.tuning
+        log: list[str] = []
+        if tuning is not None:
+            backend = get_backend(tuning.backend)
+            tile_h = tuning.tile_h
+            log.append(
+                f"tuning: manifest TunedPlan -> backend={backend.name} "
+                f"tile_h={tile_h} micro_batch={tuning.micro_batch} "
+                f"(measured {tuning.mode} on {tuning.host or 'unknown'})")
         spec = config.spec
         plan = build_pass_plan(spec, config.in_h, config.in_w)
         head_plan = plan.head(config.head_dim, activation=config.head_act)
         fused_head = backend.fused_head or (config.head_placement == "fused"
                                             and backend.mode == "fused")
         vmem_head = head_plan if fused_head else None
-        max_safe = plan.max_safe_batch(head=vmem_head, tile_h=config.tile_h)
+        max_safe = plan.max_safe_batch(head=vmem_head, tile_h=tile_h)
         # The VMEM residency model describes the FUSED kernel (whole-batch
         # input resident on-chip); per-pass/grouped kernels stream row
         # blocks and are batch-size-indifferent.  interpret=None resolves
@@ -266,11 +311,25 @@ class Deployment:
                 or jax.default_backend() == "tpu"
         else:
             compiled = not config.interpret
-        if backend.mode == "fused" and compiled:
-            plan.check_batch(config.max_batch, head=vmem_head,
-                             tile_h=config.tile_h)
+        stream_chunk: Optional[int] = None
+        if backend.mode == "fused":
+            if compiled and max_safe < 1:
+                raise cls._unlaunchable(config, plan, vmem_head, tile_h)
+            if backend.streamed:
+                chunk = tuning.micro_batch if tuning is not None else 0
+                if compiled:
+                    chunk = min(chunk, max_safe) if chunk >= 1 else max_safe
+                elif chunk < 1:
+                    chunk = max_safe if max_safe >= 1 else config.max_batch
+                stream_chunk = max(1, min(chunk, config.max_batch))
+            elif compiled and config.max_batch > max_safe:
+                # Over-budget micro-batch on the plain fused path: pipeline
+                # it instead of rejecting the deployment.
+                stream_chunk = max_safe
+                log.append(cls._pipelining_note(config, max_safe, tile_h,
+                                                stream_chunk))
         codec = get_codec(config.codec)
-        mode, tile_h, interpret = backend.mode, config.tile_h, config.interpret
+        mode, interpret = backend.mode, config.interpret
         head_act = config.head_act
 
         def edge_apply(edge_params, obs):
@@ -278,7 +337,8 @@ class Deployment:
             # size-checked) on every frame
             return miniconv_apply(edge_params, spec, obs, use_kernel=mode,
                                   plan=plan if mode == "fused" else None,
-                                  tile_h=tile_h, interpret=interpret)
+                                  tile_h=tile_h, interpret=interpret,
+                                  stream_chunk=stream_chunk)
 
         def server_apply(server_params, feats):
             z = dense(server_params["proj"], feats.reshape(feats.shape[0], -1))
@@ -304,7 +364,9 @@ class Deployment:
                 _, z = miniconv_apply(params["edge"], spec, obs,
                                       use_kernel=mode, plan=p, tile_h=tile_h,
                                       head=params["server"]["proj"],
-                                      head_act=head_act, interpret=interpret)
+                                      head_act=head_act, interpret=interpret,
+                                      stream_chunk=stream_chunk
+                                      if p is not None else None)
                 return z
         else:
             def encoder_apply(params, obs):
@@ -315,14 +377,51 @@ class Deployment:
                     else None
                 feats = miniconv_apply(params["edge"], spec, obs,
                                        use_kernel=mode, plan=p,
-                                       tile_h=tile_h, interpret=interpret)
+                                       tile_h=tile_h, interpret=interpret,
+                                       stream_chunk=stream_chunk
+                                       if p is not None else None)
                 return server_apply(params["server"], feats)
 
         encoder = Encoder(name=f"miniconv{spec.k_out}", init=init,
                           apply=encoder_apply, spec=spec)
         return cls(config=config, backend=backend, plan=plan,
                    head_plan=head_plan, codec=codec, split=split,
-                   encoder=encoder, max_safe_batch=max_safe)
+                   encoder=encoder, max_safe_batch=max_safe, tile_h=tile_h,
+                   stream_chunk=stream_chunk, compiled=compiled,
+                   build_log=tuple(log))
+
+    # ---- over-budget diagnostics ------------------------------------------
+    @staticmethod
+    def _suggestion(config) -> str:
+        """The tuner's cost-model pick, formatted for diagnostics."""
+        from repro.core.tuning import suggest_tuning
+        try:
+            s = suggest_tuning(config)
+        except ValueError:
+            return ""
+        return (f"; tuner suggests backend={s.backend} tile_h={s.tile_h} "
+                f"micro_batch={s.micro_batch} (python -m repro.deploy "
+                f"--tune to measure and freeze)")
+
+    @classmethod
+    def _unlaunchable(cls, config, plan, vmem_head, tile_h) -> ValueError:
+        need = plan.vmem_bytes(1, head=vmem_head, tile_h=tile_h)
+        from repro.core.passplan import DEFAULT_VMEM_LIMIT
+        return ValueError(
+            f"compiled fused launch cannot fit VMEM at ANY batch size: one "
+            f"{plan.in_h}x{plan.in_w} frame needs ~{need / 2**20:.2f} MiB "
+            f"> budget {DEFAULT_VMEM_LIMIT / 2**20:.2f} MiB "
+            f"(max_safe_batch=0, tile_h={tile_h}) — batch pipelining "
+            f"cannot help; lower the input size or split the spec"
+            + cls._suggestion(config))
+
+    @classmethod
+    def _pipelining_note(cls, config, max_safe, tile_h, chunk) -> str:
+        return (f"pipelining: max_batch {config.max_batch} exceeds "
+                f"max_safe_batch {max_safe} (tile_h={tile_h}) — streaming "
+                f"the fused launch in {chunk}-frame chunks "
+                f"(kernels.miniconv_pass.miniconv_encoder_stream)"
+                + cls._suggestion(config))
 
     # ---- parameters --------------------------------------------------------
     def init(self, key):
@@ -481,6 +580,12 @@ def main(argv=None):
     ap.add_argument("--verify", action="store_true",
                     help="rebuild from the reloaded manifest and assert "
                          "identical encoder outputs and wire payloads")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune backend/tile_h/micro-batch for this "
+                         "config (core.tuning) and freeze the winning "
+                         "TunedPlan into the written manifest")
+    ap.add_argument("--tune-iters", type=int, default=5,
+                    help="timing repetitions per measured candidate")
     args = ap.parse_args(argv)
 
     cfg = DeploymentConfig.standard(k=args.k, c_in=args.c_in, h=args.x,
@@ -488,7 +593,19 @@ def main(argv=None):
                                     max_batch=args.max_batch,
                                     n_servers=args.n_servers,
                                     router=args.router)
+    if args.tune:
+        from repro.core.tuning import tune
+        print(f"  tuning {args.backend} X={args.x} "
+              f"max_batch={args.max_batch} ...")
+        tp = tune(cfg, iters=args.tune_iters, log=print)
+        cfg = dataclasses.replace(cfg, tuning=tp)
+        print(f"  tuned: backend={tp.backend} tile_h={tp.tile_h} "
+              f"micro_batch={tp.micro_batch} "
+              f"({tp.per_frame_s * 1e6:.1f} us/frame, mode={tp.mode}, "
+              f"searched={tp.searched} pruned={tp.pruned})")
     dep = Deployment.build(cfg)
+    for line in dep.build_log:
+        print(f"  {line}")
     with open(args.out, "w") as f:
         f.write(cfg.to_json(indent=2))
     print(f"  wrote {args.out}")

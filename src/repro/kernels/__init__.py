@@ -1,3 +1,25 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the MiniConv shader-pass schedule.
+
+Module map
+----------
+``miniconv_pass``
+    The execution tiers behind the ``repro.core.backends`` registry:
+    :func:`~repro.kernels.miniconv_pass.miniconv_pass` (per-pass oracle,
+    backend ``reference``), :func:`~repro.kernels.miniconv_pass.
+    miniconv_layer_grouped` (``grouped``), :func:`~repro.kernels.
+    miniconv_pass.miniconv_encoder` (``fused`` / ``fused+head`` — the
+    whole encoder, optionally with the projection epilogue, as ONE
+    pallas_call) and :func:`~repro.kernels.miniconv_pass.
+    miniconv_encoder_stream` (``fused+stream`` — the fused kernel
+    pipelined over batch chunks, lifting the batch-must-fit-VMEM cap).
+``ops``
+    Public jit'd wrappers (``miniconv_layer``) used by the per-pass and
+    grouped tiers.
+``ref``
+    Pure-jnp oracles every kernel here is parity-tested against.
+``flash_attention``
+    Blocked (flash) attention prefill kernel for the baselines.
+``pallas_compat``
+    Pallas API version shims plus ``compiled_pallas_supported()``, the
+    probe gating the ``REPRO_PALLAS_COMPILE=1`` compiled-path tier.
+"""

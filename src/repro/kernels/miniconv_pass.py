@@ -49,11 +49,26 @@ execution tiers (see ``repro.core.passplan`` for the schedule itself):
    so the epilogue matmul fills whole MXU lanes (the zero columns are
    sliced off the returned projection).
 
+4. :func:`miniconv_encoder_stream` — the fused encoder pipelined over
+   BATCH CHUNKS, lifting the batch-must-fit-VMEM rule
+   (``PassPlan.max_safe_batch``).  The micro-batch is split into
+   ``chunk_b``-frame chunks; on compiled TPU a single pallas_call with a
+   (chunk, batch, tile) grid fetches each chunk's input block HBM->VMEM
+   per grid step (Pallas double-buffers the next chunk's fetch behind the
+   current chunk's compute), while the portable fallback issues one fused
+   launch per chunk (automatic multi-launch splitting).  When the batch
+   divides into whole chunks both strategies are bitwise equal to calling
+   :func:`miniconv_encoder` chunk-by-chunk and concatenating, so
+   arbitrarily large micro-batches stream through one server (see
+   :func:`miniconv_encoder_stream` for the ragged-remainder contract).
+   Registered as the ``fused+stream`` execution backend
+   (``repro.core.backends``).
+
 Stride-2 passes subsample the input rows/cols, mirroring the shader's
 half-resolution render target.  On very large inputs the fused kernel keeps
 the full input image plus the last intermediate in VMEM (~a few MB at
 X=400); for bigger frames lower ``tile_h`` does not help — split the spec
-or fall back to the per-layer kernels.
+or stream the batch (:func:`miniconv_encoder_stream`).
 """
 from __future__ import annotations
 
@@ -250,7 +265,7 @@ def _conv_from_padded(xp, w, b, *, out_h: int, out_w: int, stride: int,
 
 
 def _encoder_kernel(*refs, plan, tile_h: int, scratch_rows: int,
-                    has_head: bool, head_act: str):
+                    has_head: bool, head_act: str, streamed: bool = False):
     """One (batch, out_row_tile) grid step of the fused encoder.
 
     refs layout: x_ref, w_0..w_{L-1}, b_0..b_{L-1}[, hw_ref, hb_ref],
@@ -269,7 +284,13 @@ def _encoder_kernel(*refs, plan, tile_h: int, scratch_rows: int,
     is only consumed on the first tile step anyway; whole-array blocks
     skip the copy entirely.  Compiled-TPU consequence: the whole
     micro-batch input must fit VMEM (~1 MB at the serving scale B=8,
-    X=84; split the batch above ~X=256 at B=8).
+    X=84; stream the batch above that — see ``streamed``).
+
+    With ``streamed=True`` the grid gains a leading batch-CHUNK dimension,
+    ``x_ref`` is one chunk's input block (re-fetched HBM->VMEM when the
+    chunk index advances; Pallas double-buffers that fetch behind the
+    previous chunk's compute on compiled TPU) and ``b_i`` indexes WITHIN
+    the chunk — so only ``chunk_b`` frames are VMEM-resident at a time.
     """
     layers = plan.layers
     L = len(layers)
@@ -284,8 +305,9 @@ def _encoder_kernel(*refs, plan, tile_h: int, scratch_rows: int,
     scr = refs[n_in + (2 if has_head else 1):]
     p_scr = scr[0] if L > 1 else None
     z_scr = scr[-1] if has_head else None
-    b_i = pl.program_id(0)
-    t = pl.program_id(1)
+    b_i = pl.program_id(1 if streamed else 0)
+    t = pl.program_id(2 if streamed else 1)
+    tile_dim = 2 if streamed else 1
     last = layers[-1]
 
     if L > 1:
@@ -343,7 +365,7 @@ def _encoder_kernel(*refs, plan, tile_h: int, scratch_rows: int,
         z_scr[...] = z_scr[...] + (
             y.reshape(1, -1) @ hw_ref[pl.ds(t, 1)][0].astype(jnp.float32))
 
-        @pl.when(t == pl.num_programs(1) - 1)
+        @pl.when(t == pl.num_programs(tile_dim) - 1)
         def _z_flush():
             z_ref[0] = _ACTS[head_act](z_scr[...])[0].astype(z_ref.dtype)
 
@@ -405,10 +427,17 @@ def miniconv_encoder(x, weights, biases, plan, *, tile_h: int = 8,
                              head_act=head_act, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "tile_h", "head_act",
-                                             "interpret"))
-def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
-                      head_w, head_b, head_act: str, interpret: bool):
+def _prep_fused_inputs(x, weights, biases, plan, *, tile_h: int,
+                       head_w, head_b):
+    """Shared argument preparation for the fused / streamed encoders.
+
+    Pads the input batch to RGBA channel multiples with layer-0 SAME
+    padding baked in, zero-pads per-layer weights/biases, tiles and
+    lane-pads the optional head weight, and derives every static dimension
+    both launch shapes need.  Returns a plain dict so the single-launch
+    and batch-streamed callers build their own grids/BlockSpecs over
+    IDENTICAL kernel operands (this is what makes them bitwise-equal).
+    """
     layers = plan.layers
     L = len(layers)
     B, h, w_sz, c_in = x.shape
@@ -442,28 +471,10 @@ def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
         ws.append(wp)
         bs.append(bp)
 
-    # Whole-array block (constant index map): the kernel slices out the
-    # batch element itself — see the interpret-mode fetch note in
-    # _encoder_kernel's docstring.
-    in_specs = [pl.BlockSpec((B, x0_rows, first.padded_in_w, first.c_in_pad),
-                             lambda b_, t: (0, 0, 0, 0))]
-    for l in range(L):
-        m = layers[l]
-        in_specs.append(pl.BlockSpec(
-            (m.kernel, m.kernel, m.c_in_pad, m.c_out_pad),
-            lambda b_, t: (0, 0, 0, 0)))
-    for l in range(L):
-        m = layers[l]
-        in_specs.append(pl.BlockSpec((1, m.c_out_pad),
-                                     lambda b_, t: (0, 0)))
-
-    args = [xp, *ws, *bs]
-    out_specs = [pl.BlockSpec((1, tile_h, last.out_w, last.c_out_pad),
-                              lambda b_, t: (b_, t, 0, 0))]
-    out_shape = [jax.ShapeDtypeStruct(
-        (B, n_tiles * tile_h, last.out_w, last.c_out_pad), x.dtype)]
+    hw_pad = hb = None
+    d_out = d_pad = 0
+    tile_flat = tile_h * last.out_w * last.c_out_pad
     if has_head:
-        tile_flat = tile_h * last.out_w * last.c_out_pad
         if head_w.ndim == 3:              # pre-tiled by prepare_fused_head
             assert head_w.shape[:2] == (n_tiles, tile_flat), \
                 (head_w.shape, n_tiles, tile_flat)
@@ -483,12 +494,6 @@ def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
         if d_pad != d_out:
             hb = jnp.pad(hb, ((0, d_pad - d_out),))
         hb = hb.reshape(1, d_pad)
-        in_specs.append(pl.BlockSpec((n_tiles, tile_flat, d_pad),
-                                     lambda b_, t: (0, 0, 0)))
-        in_specs.append(pl.BlockSpec((1, d_pad), lambda b_, t: (0, 0)))
-        args += [hw_pad, hb]
-        out_specs.append(pl.BlockSpec((1, d_pad), lambda b_, t: (b_, 0)))
-        out_shape.append(jax.ShapeDtypeStruct((B, d_pad), x.dtype))
 
     scratch_shapes = []
     if L > 1:
@@ -497,22 +502,208 @@ def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
     if has_head:
         scratch_shapes.append(pltpu.VMEM((1, d_pad), jnp.float32))
 
+    return dict(xp=xp, ws=ws, bs=bs, hw_pad=hw_pad, hb=hb,
+                has_head=has_head, tile_h=tile_h, n_tiles=n_tiles,
+                tile_flat=tile_flat, scratch_rows=scratch_rows,
+                x0_rows=x0_rows, d_out=d_out, d_pad=d_pad,
+                scratch_shapes=scratch_shapes, B=B, L=L,
+                first=first, last=last)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "tile_h", "head_act",
+                                             "interpret"))
+def _miniconv_encoder(x, weights, biases, plan, *, tile_h: int,
+                      head_w, head_b, head_act: str, interpret: bool):
+    p = _prep_fused_inputs(x, weights, biases, plan, tile_h=tile_h,
+                           head_w=head_w, head_b=head_b)
+    B, L, first, last = p["B"], p["L"], p["first"], p["last"]
+    tile_h, n_tiles = p["tile_h"], p["n_tiles"]
+
+    # Whole-array block (constant index map): the kernel slices out the
+    # batch element itself — see the interpret-mode fetch note in
+    # _encoder_kernel's docstring.
+    in_specs = [pl.BlockSpec(
+        (B, p["x0_rows"], first.padded_in_w, first.c_in_pad),
+        lambda b_, t: (0, 0, 0, 0))]
+    for l in range(L):
+        m = plan.layers[l]
+        in_specs.append(pl.BlockSpec(
+            (m.kernel, m.kernel, m.c_in_pad, m.c_out_pad),
+            lambda b_, t: (0, 0, 0, 0)))
+    for l in range(L):
+        m = plan.layers[l]
+        in_specs.append(pl.BlockSpec((1, m.c_out_pad),
+                                     lambda b_, t: (0, 0)))
+
+    args = [p["xp"], *p["ws"], *p["bs"]]
+    out_specs = [pl.BlockSpec((1, tile_h, last.out_w, last.c_out_pad),
+                              lambda b_, t: (b_, t, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct(
+        (B, n_tiles * tile_h, last.out_w, last.c_out_pad), x.dtype)]
+    if p["has_head"]:
+        d_pad = p["d_pad"]
+        in_specs.append(pl.BlockSpec((n_tiles, p["tile_flat"], d_pad),
+                                     lambda b_, t: (0, 0, 0)))
+        in_specs.append(pl.BlockSpec((1, d_pad), lambda b_, t: (0, 0)))
+        args += [p["hw_pad"], p["hb"]]
+        out_specs.append(pl.BlockSpec((1, d_pad), lambda b_, t: (b_, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, d_pad), x.dtype))
+
     out = pl.pallas_call(
         functools.partial(_encoder_kernel, plan=plan, tile_h=tile_h,
-                          scratch_rows=scratch_rows, has_head=has_head,
-                          head_act=head_act),
+                          scratch_rows=p["scratch_rows"],
+                          has_head=p["has_head"], head_act=head_act),
         grid=(B, n_tiles),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=scratch_shapes,
+        scratch_shapes=p["scratch_shapes"],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(*args)
     feats = out[0][:, :plan.out_h, :, :plan.k_out]
-    return (feats, out[1][:, :d_out]) if has_head else feats
+    return (feats, out[1][:, :p["d_out"]]) if p["has_head"] else feats
+
+
+# ---------------------------------------------------------------------------
+# Tier 4: large-batch streaming (the batch no longer has to fit VMEM)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("plan", "chunk_b", "tile_h",
+                                             "head_act", "interpret"))
+def _miniconv_encoder_pipelined(x, weights, biases, plan, *, chunk_b: int,
+                                tile_h: int, head_w, head_b, head_act: str,
+                                interpret: bool):
+    """ONE pallas_call over a (n_chunks, chunk_b, n_tiles) grid.
+
+    The input BlockSpec covers one ``chunk_b``-frame chunk and its index
+    map advances with the chunk grid dimension, so only one chunk's input
+    block is VMEM-resident at a time; on compiled TPU, Pallas's revolving
+    block buffers fetch chunk c+1 HBM->VMEM while chunk c computes (the
+    double-buffered pipeline).  The batch is zero-padded up to a whole
+    number of chunks; padded frames compute garbage that is sliced off
+    (each batch element is independent, so real frames are bitwise
+    unaffected).
+    """
+    B = x.shape[0]
+    n_chunks = -(-B // chunk_b)
+    b_pad = n_chunks * chunk_b
+    if b_pad != B:
+        x = jnp.pad(x, ((0, b_pad - B), (0, 0), (0, 0), (0, 0)))
+    p = _prep_fused_inputs(x, weights, biases, plan, tile_h=tile_h,
+                           head_w=head_w, head_b=head_b)
+    L, first, last = p["L"], p["first"], p["last"]
+    tile_h, n_tiles = p["tile_h"], p["n_tiles"]
+
+    # Per-chunk input block: fetched when the chunk index advances.
+    in_specs = [pl.BlockSpec(
+        (chunk_b, p["x0_rows"], first.padded_in_w, first.c_in_pad),
+        lambda c, b_, t: (c, 0, 0, 0))]
+    for l in range(L):
+        m = plan.layers[l]
+        in_specs.append(pl.BlockSpec(
+            (m.kernel, m.kernel, m.c_in_pad, m.c_out_pad),
+            lambda c, b_, t: (0, 0, 0, 0)))
+    for l in range(L):
+        m = plan.layers[l]
+        in_specs.append(pl.BlockSpec((1, m.c_out_pad),
+                                     lambda c, b_, t: (0, 0)))
+
+    args = [p["xp"], *p["ws"], *p["bs"]]
+    out_specs = [pl.BlockSpec(
+        (1, tile_h, last.out_w, last.c_out_pad),
+        lambda c, b_, t: (c * chunk_b + b_, t, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct(
+        (b_pad, n_tiles * tile_h, last.out_w, last.c_out_pad), x.dtype)]
+    if p["has_head"]:
+        d_pad = p["d_pad"]
+        in_specs.append(pl.BlockSpec((n_tiles, p["tile_flat"], d_pad),
+                                     lambda c, b_, t: (0, 0, 0)))
+        in_specs.append(pl.BlockSpec((1, d_pad), lambda c, b_, t: (0, 0)))
+        args += [p["hw_pad"], p["hb"]]
+        out_specs.append(pl.BlockSpec((1, d_pad),
+                                      lambda c, b_, t: (c * chunk_b + b_, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((b_pad, d_pad), x.dtype))
+
+    out = pl.pallas_call(
+        functools.partial(_encoder_kernel, plan=plan, tile_h=tile_h,
+                          scratch_rows=p["scratch_rows"],
+                          has_head=p["has_head"], head_act=head_act,
+                          streamed=True),
+        grid=(n_chunks, chunk_b, n_tiles),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=p["scratch_shapes"],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+    feats = out[0][:B, :plan.out_h, :, :plan.k_out]
+    return (feats, out[1][:B, :p["d_out"]]) if p["has_head"] else feats
+
+
+def miniconv_encoder_stream(x, weights, biases, plan, *, chunk_b: int,
+                            tile_h: int = 8, head_w=None, head_b=None,
+                            head_act: str = "relu", interpret=None,
+                            pipelined=None):
+    """Fused encoder over a micro-batch LARGER than the VMEM budget allows.
+
+    Splits the (B, H, W, C) batch into ``chunk_b``-frame chunks so only one
+    chunk's input is VMEM-resident at a time (``chunk_b`` should come from
+    ``PassPlan.max_safe_batch``).  Two execution strategies:
+
+    * ``pipelined=True`` — ONE pallas_call whose grid iterates chunks;
+      per-chunk input BlockSpecs give the double-buffered HBM->VMEM fetch
+      on compiled TPU.  Default on compiled TPU.  Bitwise equal to the
+      single whole-batch fused launch.
+    * ``pipelined=False`` — automatic multi-launch splitting: one fused
+      launch per chunk (at most two compiled programs: the full chunk and
+      the remainder).  The portable fallback; default everywhere else
+      (per-step block fetches are pathologically slow in interpret mode).
+      Bitwise equal to running :func:`miniconv_encoder` chunk-by-chunk and
+      concatenating — by construction.
+
+    When ``B % chunk_b == 0`` the two strategies are themselves bitwise
+    identical (every chunk launch has the same grid shape as the streamed
+    grid's inner steps).  A ragged remainder chunk may differ from the
+    whole-batch launch by float-associativity ulps in the head projection
+    (XLA schedules a size-1 grid differently); features are always
+    bitwise.
+
+    Returns the same (features[, projection]) as :func:`miniconv_encoder`.
+    """
+    if chunk_b < 1:
+        raise ValueError(f"chunk_b must be >= 1, got {chunk_b}")
+    if interpret is None:
+        interpret = (not os.environ.get("REPRO_PALLAS_COMPILE")
+                     and jax.default_backend() != "tpu")
+    B = x.shape[0]
+    if B <= chunk_b:                      # fits one launch: nothing to stream
+        return _miniconv_encoder(x, weights, biases, plan, tile_h=tile_h,
+                                 head_w=head_w, head_b=head_b,
+                                 head_act=head_act, interpret=interpret)
+    if pipelined is None:
+        pipelined = not interpret and jax.default_backend() == "tpu"
+    if pipelined:
+        return _miniconv_encoder_pipelined(
+            x, weights, biases, plan, chunk_b=chunk_b, tile_h=tile_h,
+            head_w=head_w, head_b=head_b, head_act=head_act,
+            interpret=interpret)
+    # Multi-launch splitting: tile the head ONCE (not per chunk).
+    if head_w is not None and head_w.ndim == 2:
+        head_w = prepare_fused_head(head_w, plan, tile_h=tile_h)
+    chunks = [
+        _miniconv_encoder(x[i:i + chunk_b], weights, biases, plan,
+                          tile_h=tile_h, head_w=head_w, head_b=head_b,
+                          head_act=head_act, interpret=interpret)
+        for i in range(0, B, chunk_b)]
+    if head_w is not None:
+        return (jnp.concatenate([c[0] for c in chunks]),
+                jnp.concatenate([c[1] for c in chunks]))
+    return jnp.concatenate(chunks)
 
 
 __all__ = ["miniconv_pass", "miniconv_layer_grouped", "miniconv_encoder",
-           "prepare_fused_head"]
+           "miniconv_encoder_stream", "prepare_fused_head"]

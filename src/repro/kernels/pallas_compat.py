@@ -1,9 +1,14 @@
-"""Version compatibility helpers for the Pallas TPU API.
+"""Version/platform compatibility helpers for the Pallas TPU API.
 
 ``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
-JAX releases; this repo runs on both.
+JAX releases; this repo runs on both.  ``compiled_pallas_supported`` probes
+whether THIS host can execute a non-interpret ``pallas_call`` at all — the
+gate for the ``REPRO_PALLAS_COMPILE=1`` test/bench tier (most CPU-only JAX
+builds raise "Only interpret mode is supported on CPU backend").
 """
 from __future__ import annotations
+
+import functools
 
 from jax.experimental.pallas import tpu as pltpu
 
@@ -15,4 +20,30 @@ def tpu_compiler_params(**kwargs):
     return cls(**kwargs)
 
 
-__all__ = ["tpu_compiler_params"]
+@functools.lru_cache(maxsize=1)
+def compiled_pallas_supported() -> bool:
+    """True when a compiled (non-interpret) pallas_call can run here.
+
+    TPU hosts always qualify; elsewhere a trivial kernel is attempted once
+    and the result cached, so the ``REPRO_PALLAS_COMPILE=1`` tier can skip
+    with an explicit marker instead of erroring mid-suite.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    if jax.default_backend() == "tpu":
+        return True
+    try:
+        def _k(x_ref, o_ref):
+            o_ref[...] = x_ref[...] + 1.0
+
+        out = pl.pallas_call(
+            _k, out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            interpret=False)(jnp.zeros((8, 128), jnp.float32))
+        jax.block_until_ready(out)
+        return True
+    except Exception:
+        return False
+
+
+__all__ = ["compiled_pallas_supported", "tpu_compiler_params"]

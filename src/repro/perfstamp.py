@@ -1,0 +1,92 @@
+"""Execution-mode and host stamps for perf artifacts.
+
+Every number this repo records depends on HOW the kernels executed
+(Pallas interpret vs compiled) and WHERE (host platform, accelerator,
+core count).  Comparing a compiled-TPU artifact against an interpret-CPU
+one is meaningless, and before this module nothing in the BENCH files
+said which was which — the ROADMAP's standing "all numbers are
+interpret-mode" ambiguity.
+
+:func:`stamp` annotates a result dict with ``mode``, ``host`` and
+(optionally) ``backend``; :func:`check_comparable` is the gate the CI
+compare steps call before diffing two artifacts — it refuses to compare
+across mismatched execution modes and warns on host mismatches via the
+returned reason list.
+"""
+from __future__ import annotations
+
+import os
+import platform
+from typing import Optional
+
+
+def execution_mode(interpret: Optional[bool] = None) -> str:
+    """``"interpret"`` or ``"compiled"`` — resolved exactly like the
+    kernel layer resolves ``interpret=None`` (compiled on TPU or with
+    ``REPRO_PALLAS_COMPILE=1``, interpret everywhere else)."""
+    if interpret is None:
+        import jax
+        interpret = (not os.environ.get("REPRO_PALLAS_COMPILE")
+                     and jax.default_backend() != "tpu")
+    return "interpret" if interpret else "compiled"
+
+
+def host_fingerprint() -> str:
+    """``platform/machine/device-kind/cpu-count``, e.g.
+    ``linux/x86_64/cpu/2``.  Coarse on purpose: enough to flag
+    cross-host comparisons without leaking hostnames into artifacts."""
+    try:
+        import jax
+        device = jax.devices()[0].device_kind.replace("/", "-")
+    except Exception:
+        device = "unknown"
+    return "/".join([platform.system().lower(), platform.machine(),
+                     device, str(os.cpu_count() or 0)])
+
+
+def stamp(entry: dict, *, backend: Optional[str] = None,
+          interpret: Optional[bool] = None) -> dict:
+    """Return a copy of ``entry`` stamped with mode/host (+ backend)."""
+    out = dict(entry)
+    out["mode"] = execution_mode(interpret)
+    out["host"] = host_fingerprint()
+    if backend is not None:
+        out["backend"] = backend
+    return out
+
+
+def mismatches(a: dict, b: dict) -> list[str]:
+    """Comparability defects between two stamped entries.
+
+    ``mode`` mismatches (or a missing ``mode`` on either side) are hard
+    failures for :func:`check_comparable`; ``host``/``backend``
+    mismatches are reported so callers can surface them, but two runs on
+    different hosts are still a meaningful (cross-host) comparison.
+    """
+    out = []
+    ma, mb = a.get("mode"), b.get("mode")
+    if ma is None or mb is None:
+        out.append(f"mode missing (got {ma!r} vs {mb!r}; artifact predates "
+                   "stamping — re-run the benchmark)")
+    elif ma != mb:
+        out.append(f"mode {ma!r} != {mb!r}")
+    for key in ("host", "backend"):
+        va, vb = a.get(key), b.get(key)
+        if va is not None and vb is not None and va != vb:
+            out.append(f"{key} {va!r} != {vb!r}")
+    return out
+
+
+def check_comparable(a: dict, b: dict, *, what: str = "artifacts") -> None:
+    """Raise ValueError when two stamped entries must not be compared
+    (different or missing execution modes — interpret-vs-compiled deltas
+    are noise, not signal)."""
+    hard = [m for m in mismatches(a, b) if m.startswith("mode")]
+    if hard:
+        raise ValueError(
+            f"refusing to compare {what} across execution modes: "
+            + "; ".join(hard))
+
+
+__all__ = ["execution_mode", "host_fingerprint", "stamp", "mismatches",
+           "check_comparable"]

@@ -1,0 +1,86 @@
+"""Compiled-path (REPRO_PALLAS_COMPILE=1) validation tier.
+
+Exercises the fused and fused+head kernels COMPILED (interpret=False) at
+the ``max_safe_batch`` VMEM boundary and far past it through the
+``fused+stream`` batch pipeline.  Most CPU-only JAX builds cannot lower a
+non-interpret pallas_call at all ("Only interpret mode is supported on
+CPU backend"), so the whole module skips with an explicit marker unless
+:func:`repro.kernels.pallas_compat.compiled_pallas_supported` probes
+true (TPU hosts, or CPU builds with compiled-Pallas support).  CI runs
+this file under ``REPRO_PALLAS_COMPILE=1``; on its CPU runners the skip
+marker IS the expected outcome.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.miniconv import miniconv_init, standard_spec
+from repro.kernels.pallas_compat import compiled_pallas_supported
+from repro.kernels.miniconv_pass import (miniconv_encoder,
+                                         miniconv_encoder_stream)
+
+pytestmark = pytest.mark.skipif(
+    not compiled_pallas_supported(),
+    reason="compiled (non-interpret) Pallas is not supported on this "
+           "host's JAX backend — compiled-path tier requires TPU or a "
+           "compiled-Pallas-capable build")
+
+X = 48          # deployment-scale input, small enough for CI arrays
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    spec = standard_spec()
+    params = miniconv_init(jax.random.PRNGKey(0), spec)
+    plan = spec.plan(X)
+    ws = [params[f"layer{i}"]["kernel"] for i in range(len(spec.layers))]
+    bs = [params[f"layer{i}"]["bias"] for i in range(len(spec.layers))]
+    hw = jax.random.normal(jax.random.PRNGKey(1),
+                           (plan.flat_features, 32)) * 0.05
+    hb = jax.random.normal(jax.random.PRNGKey(2), (32,)) * 0.05
+    return plan, ws, bs, hw, hb
+
+
+def _x(b):
+    return jax.random.uniform(jax.random.PRNGKey(b), (b, X, X, 12))
+
+
+@pytest.mark.parametrize("with_head", [False, True])
+def test_compiled_fused_at_max_safe_boundary(fixture, with_head):
+    """A compiled fused launch at exactly max_safe_batch frames runs and
+    matches the interpret-mode oracle."""
+    plan, ws, bs, hw, hb = fixture
+    head = plan.head(32) if with_head else None
+    b = min(plan.max_safe_batch(head=head), 32)
+    assert b >= 1
+    kw = dict(head_w=hw, head_b=hb) if with_head else {}
+    got = miniconv_encoder(_x(b), ws, bs, plan, interpret=False, **kw)
+    want = miniconv_encoder(_x(b), ws, bs, plan, interpret=True, **kw)
+    if with_head:
+        np.testing.assert_allclose(got[0], want[0], atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(got[1], want[1], atol=1e-4, rtol=1e-4)
+    else:
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("with_head", [False, True])
+def test_compiled_stream_past_max_safe(fixture, with_head):
+    """B = 4x the chunk streams through one compiled pipelined launch,
+    bitwise-equal to compiled chunk-by-chunk fused execution."""
+    plan, ws, bs, hw, hb = fixture
+    chunk = min(plan.max_safe_batch(head=plan.head(32) if with_head
+                                    else None), 8)
+    assert chunk >= 1
+    b = 4 * chunk
+    kw = dict(head_w=hw, head_b=hb) if with_head else {}
+    x = _x(b)
+    pipe = miniconv_encoder_stream(x, ws, bs, plan, chunk_b=chunk,
+                                   interpret=False, pipelined=True, **kw)
+    multi = miniconv_encoder_stream(x, ws, bs, plan, chunk_b=chunk,
+                                    interpret=False, pipelined=False, **kw)
+    if with_head:
+        np.testing.assert_array_equal(pipe[0], multi[0])
+        np.testing.assert_array_equal(pipe[1], multi[1])
+    else:
+        np.testing.assert_array_equal(pipe, multi)
