@@ -52,6 +52,8 @@ class ServingSetup:
     obs: object
     wire_bytes: int
     frame_bytes: int
+    params: object = None         # deployment params (real-fleet workers
+    #                               rebuild their jitted halves from these)
 
 
 def standard_config(*, k: int = 4, backend: str = "xla",
@@ -86,7 +88,8 @@ def build(*, k: int = 4, seed: int = 0,
 
     obs = jax.random.uniform(key, (1, cfg.in_h, cfg.in_w, c_in))
     return ServingSetup(dep, edge_fn, split_server_fn, split_server_batch_fn,
-                        mono_server_fn, obs, dep.wire_bytes, dep.frame_bytes)
+                        mono_server_fn, obs, dep.wire_bytes, dep.frame_bytes,
+                        params)
 
 
 def run(bandwidths=(10, 25, 50, 100), *, n_decisions: int = 1000,
@@ -141,7 +144,8 @@ def measure_service_curve(setup: ServingSetup, *, max_batch: int = 8,
 
 def run_queue(*, n_clients: int = 8, mbps: float = 100.0, k: int = 4,
               max_batch: int = 8, max_wait_ms: float = 0.0,
-              rate_hz: float = 10.0, setup: ServingSetup = None):
+              rate_hz: float = 10.0, setup: ServingSetup = None,
+              real_fleet: bool = False):
     """p95 decision latency at N clients: FIFO server vs micro-batching.
 
     The batched p95 uses the MEASURED service-time curve t(B) of the
@@ -149,6 +153,12 @@ def run_queue(*, n_clients: int = 8, mbps: float = 100.0, k: int = 4,
     this host, not an assumed speedup.  When the deployment manifest sets
     ``n_servers > 1`` the sharded fleet p95 is reported too — same
     measured curve on every server, routed by the configured policy.
+
+    ``real_fleet=True`` additionally SPAWNS the manifest's fleet on
+    localhost (``repro.serving.realfleet``) and prints measured wall-clock
+    p95 under the same open-loop load next to the loopback-link sim
+    prediction — the per-run sim-to-real calibration
+    (``benchmarks/realfleet.py`` is the full sweep).
     """
     setup = setup or build(k=k)
     times, model = measure_service_curve(setup, max_batch=max_batch,
@@ -181,7 +191,55 @@ def run_queue(*, n_clients: int = 8, mbps: float = 100.0, k: int = 4,
         row["router"] = cfg.router
         print(f"  N={n_clients} fleet ({cfg.n_servers} servers, "
               f"{cfg.router}): p95 {row['fleet_p95_ms']:.2f} ms")
+    if real_fleet:
+        row.update(run_real_fleet(setup, n_clients=n_clients,
+                                  rate_hz=rate_hz))
     return row
+
+
+def run_real_fleet(setup: ServingSetup, *, n_clients: int = 8,
+                   rate_hz: float = 10.0, duration_s: float = 2.0,
+                   timeout_s: float = 30.0) -> dict:
+    """Measured p95 from the manifest's REAL fleet vs the loopback sim.
+
+    The service curve is re-measured on ``Deployment.server_batch_fn``
+    exactly as the workers serve it (no benchmark-local head), so the sim
+    prediction and the spawned fleet charge the same t(B); the uplink is
+    the localhost loopback, so both sides see negligible transfer time.
+    """
+    import numpy as np
+    from repro.serving.realfleet import pack_payload, run_load
+
+    dep = setup.deployment
+    cfg = dep.config
+    payload = setup.edge_fn(setup.obs)
+    srv = dep.server(setup.params)
+    srv.measure(payload, batch_sizes=tuple(
+        b for b in (1, 2, 4, 8, 16) if b <= cfg.max_batch), iters=10)
+    model = srv.service_model()
+    fleet = dep.fleet(setup.params, service_model=model,
+                      timeout_s=timeout_s)
+    try:
+        sim = dep.fleet_sim(model, uplink=shaped(10_000.0, rtt_ms=0.2),
+                            rate_hz=rate_hz, horizon_s=duration_s,
+                            max_batch=fleet.max_batch, max_wait_s=0.0)
+        predicted = sim.p95(n_clients)
+        body = pack_payload({k: np.asarray(v) for k, v in payload.items()})
+        rep = run_load(fleet.client, body, n_clients=n_clients,
+                       rate_hz=rate_hz, duration_s=duration_s)
+    finally:
+        leaked = fleet.close()
+    out = {"real_predicted_p95_ms": predicted * 1e3,
+           "real_measured_p95_ms": rep.p95() * 1e3,
+           "real_n_failures": rep.n_failures,
+           "real_leaked_workers": len(leaked)}
+    print(f"  N={n_clients} REAL fleet ({cfg.n_servers} servers, "
+          f"{cfg.router}, localhost): measured p95 "
+          f"{out['real_measured_p95_ms']:.2f} ms vs loopback-sim "
+          f"{out['real_predicted_p95_ms']:.2f} ms "
+          f"({rep.n_requests} reqs, {rep.n_failures} failed, "
+          f"{len(leaked)} leaked)")
+    return out
 
 
 def load_manifest(path: str) -> DeploymentConfig:
@@ -202,6 +260,10 @@ def main(argv=None):
                     help="N clients for the FIFO-vs-batched p95 report "
                          "(0 disables)")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--real-fleet", action="store_true",
+                    help="also spawn the manifest's real multi-process "
+                         "fleet on localhost and report measured p95 "
+                         "next to the loopback sim prediction")
     args = ap.parse_args(argv)
     config = load_manifest(args.manifest) if args.manifest else None
     run(tuple(float(b) for b in args.bandwidths.split(",")),
@@ -209,7 +271,8 @@ def main(argv=None):
     if args.clients:
         run_queue(n_clients=args.clients, k=args.k,
                   max_batch=args.max_batch,
-                  setup=build(k=args.k, config=config))
+                  setup=build(k=args.k, config=config),
+                  real_fleet=args.real_fleet)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,246 @@
+"""Sim-to-real fleet calibration: FleetQueueSim vs the real fleet.
+
+Everything fleet-shaped elsewhere in this repo is a prediction —
+:class:`repro.serving.fleet.FleetQueueSim` says what ``n_servers``
+micro-batching servers behind a router SHOULD do.  This benchmark runs
+that exact deployment for real (``repro.serving.realfleet``: spawned
+worker processes, localhost sockets, the same registered routers) and
+reports measured p95 decision latency next to the sim's prediction, per
+(n_servers, router) cell — the DistrEdge-style calibration the ROADMAP
+asks for before trusting fleet capacity numbers.
+
+Methodology: one manifest produces BOTH sides.  The batched service
+curve t(B) is measured in-process first (that curve drives the sim AND
+caps real-fleet admission at its largest measured batch), the uplink is
+modelled as the measured localhost loopback (effectively unshaped), and
+the SAME open-loop load (N clients at ``--rate-hz``, the Table 6
+protocol) is applied to the simulator and to the live fleet.
+
+Rows are written to ``BENCH_realfleet.json`` stamped with
+``transport: "socket"`` (``repro.perfstamp``): measured-fleet artifacts
+only ever compare against other measured-fleet artifacts — ``--against``
+exits 2 on a sim-stamped or unstamped baseline, because a sim-vs-real
+delta is a calibration result, not a regression.
+
+``--smoke`` is the bounded CI gate: n_servers in {1, 2}, every registered
+router, small N — measured p95 must stay within ``tol_rel * predicted +
+tol_abs`` of the sim, with zero failed requests and zero leaked worker
+processes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+import jax
+import numpy as np
+
+from repro import perfstamp
+from repro.deploy import Deployment, DeploymentConfig
+from repro.serving.fleet import router_names
+from repro.serving.netsim import shaped
+from repro.serving.realfleet import pack_payload, run_load
+
+ARTIFACT = "BENCH_realfleet.json"
+
+# localhost loopback stand-in for the shaped uplink: multi-Gb/s and
+# ~0.1 ms RTT — transfer time is negligible against service time, which
+# is exactly what the real fleet's clients see
+LOOPBACK_MBPS = 10_000.0
+LOOPBACK_RTT_MS = 0.2
+
+
+def small_config(*, n_servers: int = 2,
+                 router: str = "round_robin") -> DeploymentConfig:
+    """The calibration deployment: small enough that worker spawn +
+    precompile stays CI-bounded, big enough that t(B) is measurable."""
+    return DeploymentConfig.standard(k=4, c_in=4, h=24, backend="xla",
+                                     max_batch=4, n_servers=n_servers,
+                                     router=router)
+
+
+def calibrate(cfg: DeploymentConfig, *, n_servers_list=(1, 2),
+              routers=None, n_clients: int = 4, rate_hz: float = 20.0,
+              duration_s: float = 1.5, seed: int = 0,
+              timeout_s: float = 30.0) -> list[dict]:
+    """Measured vs predicted p95 per (n_servers, router) cell.
+
+    ONE fleet is spawned per fleet size and re-used across routers
+    (routing is a parent-side decision, exactly as in the sim), so the
+    spawn + jit cost is paid once per size, not once per cell.
+    """
+    dep = Deployment.build(cfg)
+    params = dep.init(jax.random.PRNGKey(seed))
+    client, bsrv = dep.serving_pair(params)
+    obs = jax.random.uniform(jax.random.PRNGKey(seed + 1),
+                             (1, cfg.in_h, cfg.in_w,
+                              cfg.spec.layers[0].c_in))
+    payload = client.encode_fn(obs)
+    body = pack_payload({k: np.asarray(v) for k, v in payload.items()})
+
+    times = bsrv.measure(payload, batch_sizes=tuple(
+        b for b in (1, 2, 4, 8) if b <= cfg.max_batch), iters=10)
+    model = bsrv.service_model()
+    curve = " ".join(f"t({b})={t*1e3:.2f}ms" for b, t in sorted(times.items()))
+    print(f"  measured service curve: {curve}")
+
+    routers = tuple(routers) if routers else router_names()
+    rows = []
+    for ns in sorted(set(n_servers_list)):
+        fleet = dep.fleet(params, n_servers=ns, service_model=model,
+                          timeout_s=timeout_s)
+        fleet_rows = []
+        try:
+            for router in routers:
+                fleet.set_router(router)
+                sim = dep.fleet_sim(
+                    model, uplink=shaped(LOOPBACK_MBPS,
+                                         rtt_ms=LOOPBACK_RTT_MS),
+                    rate_hz=rate_hz, horizon_s=duration_s, n_servers=ns,
+                    router=router, max_batch=fleet.max_batch,
+                    max_wait_s=0.0)
+                predicted = sim.p95(n_clients)
+                rep = run_load(fleet.client, body, n_clients=n_clients,
+                               rate_hz=rate_hz, duration_s=duration_s)
+                fleet_rows.append({
+                    "n_servers": ns, "router": router,
+                    "n_clients": n_clients, "rate_hz": rate_hz,
+                    "duration_s": duration_s,
+                    "n_requests": rep.n_requests,
+                    "n_failures": rep.n_failures,
+                    "predicted_p95_ms": predicted * 1e3,
+                    "measured_p95_ms": rep.p95() * 1e3,
+                    "measured_p50_ms": rep.p50() * 1e3,
+                    "max_served_batch":
+                        fleet.stats["max_served_batch"],
+                })
+                r = fleet_rows[-1]
+                print(f"  {ns}x {router:<16} N={n_clients} "
+                      f"predicted p95 {r['predicted_p95_ms']:7.2f} ms  "
+                      f"measured p95 {r['measured_p95_ms']:7.2f} ms "
+                      f"(p50 {r['measured_p50_ms']:.2f} ms, "
+                      f"{rep.n_requests} reqs, {rep.n_failures} failed)")
+        finally:
+            leaked = fleet.close()
+        for r in fleet_rows:
+            r["leaked_workers"] = len(leaked)
+        rows.extend(fleet_rows)
+        if leaked:
+            print(f"  WARNING: {ns}x fleet leaked worker pids {leaked}")
+    return rows
+
+
+def write_artifact(rows: list[dict], cfg: DeploymentConfig,
+                   *, path: str = ARTIFACT) -> dict:
+    doc = perfstamp.stamp({"kind": "realfleet_calibration",
+                           "config": cfg.to_dict(), "rows": rows},
+                          backend=cfg.backend, transport="socket")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"  wrote {path} [mode={doc['mode']} transport={doc['transport']}]")
+    return doc
+
+
+def check_against(baseline_path: str, *, artifact: str = ARTIFACT) -> list:
+    """Refuse cross-transport comparisons: a socket-measured artifact is
+    only comparable with another socket-measured artifact (sim-vs-real is
+    calibration, handled above, never a perf diff)."""
+    with open(artifact) as f:
+        current = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    perfstamp.check_comparable(current, baseline,
+                               what=f"{artifact} vs {baseline_path}")
+    soft = perfstamp.mismatches(current, baseline)
+    for m in soft:
+        print(f"  warning: {m}")
+    print(f"  {artifact} comparable with {baseline_path} "
+          f"[mode={current.get('mode')} "
+          f"transport={current.get('transport')}]")
+    return soft
+
+
+def smoke_gate(rows: list[dict], *, tol_rel: float = 3.0,
+               tol_abs_ms: float = 25.0) -> bool:
+    """The CI gate: every cell's measured p95 within one-sided tolerance
+    of the sim prediction, zero failures, zero leaked workers.
+
+    One-sided because the sim is an idealised lower bound — it does not
+    model OS scheduling, GIL contention between the load-generator
+    threads, or socket syscall overhead, so measured < predicted is fine
+    and only measured >> predicted indicates a broken serving path (e.g.
+    an accidental batch-hold or a compile in the hot loop)."""
+    ok = True
+    for r in rows:
+        bound = tol_rel * r["predicted_p95_ms"] + tol_abs_ms
+        cell_ok = (r["measured_p95_ms"] <= bound
+                   and r["n_failures"] == 0
+                   and r["leaked_workers"] == 0)
+        print(f"  gate {r['n_servers']}x {r['router']:<16} measured "
+              f"{r['measured_p95_ms']:7.2f} ms <= {bound:7.2f} ms, "
+              f"failures={r['n_failures']}, "
+              f"leaked={r['leaked_workers']}: {cell_ok}")
+        ok = ok and cell_ok
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--manifest", default=None,
+                    help="deployment manifest JSON (see python -m "
+                         "repro.deploy); default: the small calibration "
+                         "deployment")
+    ap.add_argument("--n-servers", default="1,2",
+                    help="comma-separated fleet sizes to spawn")
+    ap.add_argument("--routers", default=None,
+                    help="comma-separated routing policies (default: all "
+                         "registered)")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--rate-hz", type=float, default=20.0)
+    ap.add_argument("--duration-s", type=float, default=1.5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="bounded CI gate: measured p95 within tolerance "
+                         "of the FleetQueueSim prediction, no failed "
+                         "requests, no leaked workers (exit 1 on failure)")
+    ap.add_argument("--tol-rel", type=float, default=3.0)
+    ap.add_argument("--tol-abs-ms", type=float, default=25.0)
+    ap.add_argument("--out", default=ARTIFACT)
+    ap.add_argument("--against", metavar="OLD.json",
+                    help="check the written artifact is comparable with "
+                         "OLD.json (exit 2 on a mode or transport "
+                         "mismatch, e.g. sim-vs-real)")
+    args = ap.parse_args(argv)
+
+    if args.manifest:
+        with open(args.manifest) as f:
+            cfg = DeploymentConfig.from_dict(json.load(f))
+    else:
+        cfg = small_config()
+    sizes = tuple(int(s) for s in args.n_servers.split(","))
+    routers = tuple(args.routers.split(",")) if args.routers else None
+
+    rows = calibrate(cfg, n_servers_list=sizes, routers=routers,
+                     n_clients=args.clients, rate_hz=args.rate_hz,
+                     duration_s=args.duration_s)
+    write_artifact(rows, cfg, path=args.out)
+    if args.smoke:
+        ok = smoke_gate(rows, tol_rel=args.tol_rel,
+                        tol_abs_ms=args.tol_abs_ms)
+        print(f"  smoke: all calibration cells within tolerance, no "
+              f"failures, no leaked workers: {ok}")
+        if not ok:
+            raise SystemExit(1)
+    if args.against:
+        try:
+            check_against(args.against, artifact=args.out)
+        except ValueError as e:
+            print(f"  REFUSED: {e}")
+            raise SystemExit(2)
+
+
+if __name__ == "__main__":
+    main()

@@ -167,6 +167,11 @@ def main(argv=None):
                          "n_servers with >= 2x clients at 4 servers")
     ap.add_argument("--no-fleet", action="store_true",
                     help="skip the fleet table (single-server rows only)")
+    ap.add_argument("--real-fleet", action="store_true",
+                    help="after the fleet table, calibrate its predictions "
+                         "against the REAL spawned fleet on localhost "
+                         "(benchmarks.realfleet; uses the manifest when "
+                         "given, else the small calibration deployment)")
     ap.add_argument("--manifest", default=None,
                     help="deployment manifest JSON to build the pipeline "
                          "from (see python -m repro.deploy)")
@@ -211,6 +216,15 @@ def main(argv=None):
                         budget_ms=args.budget_ms,
                         max_batch=args.max_batch,
                         max_wait_s=args.max_wait_ms / 1e3)
+    if args.real_fleet:
+        # the sim tables above are predictions; close the loop by running
+        # the same deployment as real worker processes and comparing p95
+        from benchmarks.realfleet import calibrate, small_config, \
+            write_artifact
+        rcfg = config or small_config()
+        print("  real-fleet calibration (localhost, measured vs predicted):")
+        rows = calibrate(rcfg, n_servers_list=(1, 2))
+        write_artifact(rows, rcfg)
 
 
 if __name__ == "__main__":

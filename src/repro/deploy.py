@@ -535,6 +535,47 @@ class Deployment:
             n_servers=cfg.n_servers if n_servers is None else n_servers,
             router=cfg.router if router is None else router)
 
+    def fleet(self, params, *, n_servers: Optional[int] = None,
+              router: Optional[str] = None, max_batch: Optional[int] = None,
+              service_model: Optional[Callable[[int], float]] = None,
+              timeout_s: float = 10.0, retries: int = 2,
+              precompile: bool = True, start: bool = True):
+        """A REAL multi-process fleet for THIS deployment (localhost).
+
+        The counterpart of :meth:`fleet_sim`: ``n_servers`` spawned
+        worker processes (each rebuilding the jitted server half from
+        this manifest), length-prefix-framed sockets carrying the wire
+        codec's payloads, and the registered routing policy at the front
+        door (``repro.serving.realfleet``).  Fleet shape defaults to the
+        manifest (``n_servers`` / ``router`` / ``max_batch``), exactly
+        like the simulator.
+
+        When a measured ``service_model`` is given, worker admission is
+        capped at its :attr:`~repro.serving.server.BatchServiceModel.
+        max_measured_batch` — the real fleet never serves batch sizes the
+        t(B) curve only extrapolates, so the sim-vs-real calibration
+        compares measured numbers on both sides.
+
+        Returns a started :class:`~repro.serving.realfleet.RealFleet`
+        (``start=False`` defers the spawn); always ``close()`` it — the
+        returned leak list is the CI "no leaked workers" gate.
+        """
+        import numpy as np
+        from repro.serving.realfleet import RealFleet
+        cfg = self.config
+        cap = cfg.max_batch if max_batch is None else max_batch
+        if service_model is not None and hasattr(service_model,
+                                                 "max_measured_batch"):
+            cap = min(cap, service_model.max_measured_batch)
+        params_np = jax.tree.map(np.asarray, self._split_params(params))
+        fl = RealFleet(
+            cfg.to_dict(), params_np,
+            n_servers=cfg.n_servers if n_servers is None else n_servers,
+            router=cfg.router if router is None else router,
+            max_batch=max(1, cap), timeout_s=timeout_s, retries=retries,
+            precompile=precompile)
+        return fl.start() if start else fl
+
 
 # ---------------------------------------------------------------------------
 # Manifest CLI: python -m repro.deploy
@@ -559,6 +600,35 @@ def _verify_roundtrip(cfg: DeploymentConfig, *, seed: int = 0) -> None:
     p2 = dep2.split.edge_step(params2["edge"], obs)
     for k in p1:
         np.testing.assert_array_equal(p1[k], p2[k])
+
+
+def _real_fleet_check(cfg: DeploymentConfig, *, n_requests: int = 8,
+                      seed: int = 0) -> None:
+    """Launch the manifest's real multi-process fleet on localhost, serve
+    ``n_requests`` over sockets, and assert the actions are bitwise-equal
+    to in-process serving — then shut down and assert no worker leaked."""
+    import numpy as np
+    dep = Deployment.build(cfg)
+    params = dep.init(jax.random.PRNGKey(seed))
+    client, server = dep.serving_pair(params)
+    obs = jax.random.uniform(
+        jax.random.PRNGKey(seed + 1),
+        (n_requests, cfg.in_h, cfg.in_w, cfg.spec.layers[0].c_in))
+    payloads = [client.encode_fn(obs[i:i + 1]) for i in range(n_requests)]
+    want = [np.asarray(server.serve([p])[0]) for p in payloads]
+    fleet = dep.fleet(params)
+    try:
+        got = [fleet.request(p, client=i) for i, p in enumerate(payloads)]
+        per_server = list(fleet.stats["per_server"])
+    finally:
+        leaked = fleet.close()
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    assert not leaked, f"leaked worker processes: {leaked}"
+    print(f"  real fleet: {cfg.n_servers} worker(s) via {cfg.router} served "
+          f"{n_requests} requests over sockets (per-server {per_server}); "
+          f"actions bitwise-equal to in-process serving; clean shutdown, "
+          f"no leaked workers")
 
 
 def main(argv=None):
@@ -586,6 +656,14 @@ def main(argv=None):
                          "TunedPlan into the written manifest")
     ap.add_argument("--tune-iters", type=int, default=5,
                     help="timing repetitions per measured candidate")
+    ap.add_argument("--real-fleet", action="store_true",
+                    help="launch the manifest's REAL multi-process fleet "
+                         "on localhost (n_servers worker processes behind "
+                         "the configured router), verify socket-served "
+                         "actions are bitwise-equal to in-process serving, "
+                         "and shut down cleanly")
+    ap.add_argument("--fleet-requests", type=int, default=8,
+                    help="requests served during the --real-fleet check")
     args = ap.parse_args(argv)
 
     cfg = DeploymentConfig.standard(k=args.k, c_in=args.c_in, h=args.x,
@@ -620,6 +698,8 @@ def main(argv=None):
         _verify_roundtrip(cfg)
         print("  verified: reloaded manifest reproduces identical encoder "
               "outputs and wire payloads")
+    if args.real_fleet:
+        _real_fleet_check(reloaded, n_requests=args.fleet_requests)
 
 
 if __name__ == "__main__":

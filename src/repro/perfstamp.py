@@ -45,23 +45,33 @@ def host_fingerprint() -> str:
 
 
 def stamp(entry: dict, *, backend: Optional[str] = None,
-          interpret: Optional[bool] = None) -> dict:
-    """Return a copy of ``entry`` stamped with mode/host (+ backend)."""
+          interpret: Optional[bool] = None,
+          transport: Optional[str] = None) -> dict:
+    """Return a copy of ``entry`` stamped with mode/host (+ backend,
+    + transport).  ``transport`` distinguishes HOW a serving number was
+    produced: ``"sim"`` (event-time queue simulation) vs ``"socket"``
+    (wall-clock measured real fleet) — a sim-vs-real delta is a
+    calibration result, never a regression signal, so transport
+    mismatches are hard failures for :func:`check_comparable`."""
     out = dict(entry)
     out["mode"] = execution_mode(interpret)
     out["host"] = host_fingerprint()
     if backend is not None:
         out["backend"] = backend
+    if transport is not None:
+        out["transport"] = transport
     return out
 
 
 def mismatches(a: dict, b: dict) -> list[str]:
     """Comparability defects between two stamped entries.
 
-    ``mode`` mismatches (or a missing ``mode`` on either side) are hard
-    failures for :func:`check_comparable`; ``host``/``backend``
-    mismatches are reported so callers can surface them, but two runs on
-    different hosts are still a meaningful (cross-host) comparison.
+    ``mode`` mismatches (or a missing ``mode`` on either side) and
+    ``transport`` mismatches (sim-vs-real: differing values, or stamped
+    on only one side) are hard failures for :func:`check_comparable`;
+    ``host``/``backend`` mismatches are reported so callers can surface
+    them, but two runs on different hosts are still a meaningful
+    (cross-host) comparison.
     """
     out = []
     ma, mb = a.get("mode"), b.get("mode")
@@ -70,6 +80,12 @@ def mismatches(a: dict, b: dict) -> list[str]:
                    "stamping — re-run the benchmark)")
     elif ma != mb:
         out.append(f"mode {ma!r} != {mb!r}")
+    ta, tb = a.get("transport"), b.get("transport")
+    if (ta is None) != (tb is None):
+        out.append(f"transport stamped on one side only ({ta!r} vs {tb!r}; "
+                   "sim-vs-real comparisons are calibration, not diffs)")
+    elif ta is not None and ta != tb:
+        out.append(f"transport {ta!r} != {tb!r}")
     for key in ("host", "backend"):
         va, vb = a.get(key), b.get(key)
         if va is not None and vb is not None and va != vb:
@@ -79,9 +95,10 @@ def mismatches(a: dict, b: dict) -> list[str]:
 
 def check_comparable(a: dict, b: dict, *, what: str = "artifacts") -> None:
     """Raise ValueError when two stamped entries must not be compared
-    (different or missing execution modes — interpret-vs-compiled deltas
-    are noise, not signal)."""
-    hard = [m for m in mismatches(a, b) if m.startswith("mode")]
+    (different or missing execution modes, or sim-vs-real transports —
+    those deltas are noise or calibration, not regression signal)."""
+    hard = [m for m in mismatches(a, b)
+            if m.startswith(("mode", "transport"))]
     if hard:
         raise ValueError(
             f"refusing to compare {what} across execution modes: "

@@ -48,6 +48,17 @@ Module map
     sizing via ``max_clients`` (geometric + binary search) and
     ``min_servers``; ``n_servers=1`` reduces bitwise to
     :class:`BatchQueueSim`.
+``realfleet``
+    The fleet for REAL: :class:`RealFleet` spawns ``n_servers``
+    continuous-batching :class:`WorkerServer` processes from one
+    deployment manifest (localhost TCP, length-prefixed frames carrying
+    the existing wire-codec payloads bitwise), fronted by
+    :class:`FleetClient` — the SAME registered routers as the sim, plus
+    per-request timeouts and re-routing retries.  ``run_load`` drives the
+    Table 6 open-loop protocol against it so measured p95 can be
+    calibrated against :class:`FleetQueueSim` predictions
+    (``benchmarks/realfleet.py``).  Construct via
+    :meth:`repro.deploy.Deployment.fleet`.
 
 The batched request path end-to-end: each client encodes ONE frame
 (``Deployment.edge_fn`` / ``SplitModel.edge_step``), payloads are stacked
@@ -62,8 +73,13 @@ from repro.serving.server import (BatchingPolicyServer, BatchQueueSim,
 from repro.serving.fleet import (FleetQueueSim, ROUTERS, get_router,
                                  register_router, router_names)
 from repro.serving.client import EdgeClient, DecisionLoop
+from repro.serving.realfleet import (FleetClient, FleetError, FleetTimeout,
+                                     LoadReport, RealFleet, WorkerServer,
+                                     pack_payload, run_load, unpack_payload)
 
 __all__ = ["ShapedLink", "LinkTrace", "PolicyServer", "BatchingPolicyServer",
            "BatchServiceModel", "BatchQueueSim", "QueueSim", "FleetQueueSim",
            "ROUTERS", "get_router", "register_router", "router_names",
-           "EdgeClient", "DecisionLoop"]
+           "EdgeClient", "DecisionLoop", "FleetClient", "FleetError",
+           "FleetTimeout", "LoadReport", "RealFleet", "WorkerServer",
+           "pack_payload", "run_load", "unpack_payload"]

@@ -34,8 +34,15 @@ class EdgeClient:
     wire_bytes: int
     encode_time_s: Optional[float] = None
 
-    def measure(self, example_obs, *, iters: int = 20) -> float:
-        self.encode_fn(example_obs)  # compile
+    def measure(self, example_obs, *, iters: int = 20,
+                warmup: int = 2) -> float:
+        # compile + warmup, blocked BEFORE the clock starts: jax dispatch
+        # is async, so an unblocked warmup call would still be executing
+        # inside the timed region and skew the per-frame time
+        out = self.encode_fn(example_obs)
+        for _ in range(warmup):
+            out = self.encode_fn(example_obs)
+        _block(out)
         t0 = time.perf_counter()
         for _ in range(iters):
             out = self.encode_fn(example_obs)
@@ -44,7 +51,7 @@ class EdgeClient:
         return self.encode_time_s
 
     def measure_batch(self, example_obs, *, batch: int = 8,
-                      iters: int = 10) -> float:
+                      iters: int = 10, warmup: int = 2) -> float:
         """Per-frame encode time when ``batch`` frames share one launch.
 
         ``example_obs`` is a single (1, H, W, C) observation; it is tiled
@@ -55,7 +62,10 @@ class EdgeClient:
         import jax.numpy as jnp
         obs = jnp.broadcast_to(example_obs[:1],
                                (batch,) + tuple(example_obs.shape[1:]))
-        self.encode_fn(obs)  # compile
+        out = self.encode_fn(obs)
+        for _ in range(warmup):
+            out = self.encode_fn(obs)
+        _block(out)
         t0 = time.perf_counter()
         for _ in range(iters):
             out = self.encode_fn(obs)

@@ -5,6 +5,14 @@ with finite bandwidth, fixed propagation delay, and (optional)
 deterministic jitter.  Transfers are serialised FIFO — a transfer cannot
 start before the previous one finished (token-bucket with depth one burst),
 which is what bandwidth shaping does to a single TCP flow.
+
+Jitter semantics (matching ``tc netem delay ... jitter``): jitter is extra
+PROPAGATION delay on one transfer's arrival — it does NOT occupy the link,
+so back-to-back transfers still serialise at exactly ``tx_time`` spacing.
+The deterministic per-transfer pattern cycles 0.5x / 1.0x / 1.5x of
+``jitter_s``, so the mean added delay is exactly ``jitter_s``.  Note that
+with nonzero jitter, arrival order can differ from send order (as on a
+real jittery link); the queue simulators all run jitter-free links.
 """
 from __future__ import annotations
 
@@ -31,14 +39,19 @@ class ShapedLink:
         return 8.0 * payload_bytes / self.bandwidth_bps
 
     def send(self, t: float, payload_bytes: int) -> LinkTrace:
-        """Enqueue a transfer at time ``t``; returns timing trace."""
+        """Enqueue a transfer at time ``t``; returns timing trace.
+
+        Jitter delays THIS transfer's arrival only — it never extends the
+        link's busy window, so it cannot double-count into the
+        serialisation of subsequent transfers.
+        """
         start = max(t, self._busy_until)
-        jitter = self.jitter_s * (self._n % 3) / 2.0
-        tx_done = start + self.tx_time(payload_bytes) + jitter
+        tx_done = start + self.tx_time(payload_bytes)
         self._busy_until = tx_done
+        jitter = self.jitter_s * (0.5 + 0.5 * (self._n % 3))
         self._n += 1
         return LinkTrace(start=start, tx_done=tx_done,
-                         arrival=tx_done + self.propagation_s,
+                         arrival=tx_done + self.propagation_s + jitter,
                          payload_bytes=payload_bytes)
 
     def reset(self) -> None:

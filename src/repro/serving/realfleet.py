@@ -1,0 +1,795 @@
+"""Real multi-process serving fleet behind the router registry.
+
+Everything fleet-shaped before this module was simulation:
+:class:`~repro.serving.fleet.FleetQueueSim` *predicts* what ``n_servers``
+micro-batching servers behind a router would do.  This module *runs* that
+deployment on this host, so the sim's predictions can be validated against
+wall-clock measurements (the DistrEdge-style sim-to-real calibration in
+``benchmarks/realfleet.py``):
+
+* :class:`WorkerServer` — one micro-batching policy server: a localhost
+  TCP listener whose admission loop does CONTINUOUS batching (admit every
+  request that arrived while the previous micro-batch was in service, up
+  to ``max_batch`` — no fixed ``max_wait_ms`` hold; the running batch's
+  service time IS the batching window).  Runs in-process for tests, or as
+  the body of a spawned worker process (:func:`_worker_main`, which
+  rebuilds the jitted server half from the deployment manifest — compiled
+  functions cannot cross a process boundary).
+* :class:`FleetClient` — the front door: one socket per worker, requests
+  routed by the SAME registered policies the simulator uses
+  (``repro.serving.fleet.ROUTERS``), with per-request timeouts and
+  bounded retries that re-route around dead or stalled workers.
+* :class:`RealFleet` — the process manager: spawns ``n_servers`` worker
+  processes from one deployment manifest + parameter pytree, wires up a
+  :class:`FleetClient`, and on :meth:`RealFleet.close` drains in-flight
+  requests (graceful SHUTDOWN frame) before joining — returning the PIDs
+  of any worker that had to be killed, so CI can gate on "no leaked
+  workers".
+* :func:`run_load` — the open-loop load generator (N clients at a fixed
+  decision rate, the Table 6 protocol) whose latency sample feeds the
+  measured-vs-predicted p95 calibration.
+
+Wire format: length-prefixed frames (``!I`` byte count, then a 1-byte
+message type + body) carrying the EXISTING wire-codec payloads —
+:func:`pack_payload` serialises a codec payload dict (data tensor +
+quantisation headers) such that :func:`unpack_payload` reproduces every
+tensor bitwise, so the socket path is numerically identical to in-process
+serving (asserted per codec in tests/test_realfleet.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+import queue
+import socket
+import struct
+import threading
+import time
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.serving.fleet import Router, get_router
+
+# ---------------------------------------------------------------------------
+# Framing: length-prefixed messages carrying wire-codec payloads
+# ---------------------------------------------------------------------------
+
+MSG_REQ = 1        # !I req_id + packed payload
+MSG_RESP = 2       # !I req_id + !H served-batch-size + packed {"action": a}
+MSG_ERR = 3        # !I req_id + utf-8 message
+MSG_SHUTDOWN = 4   # empty body: drain queued requests, respond, exit
+
+
+def _dtype_token(dtype: np.dtype) -> str:
+    """Reversible wire name for a dtype.  ``dtype.str`` is
+    endianness-explicit for every native dtype but collapses extension
+    dtypes (``ml_dtypes.bfloat16``) to an opaque void — use the registered
+    name for those."""
+    return dtype.str if dtype.str[1] != "V" else dtype.name
+
+
+def _dtype_from_token(token: str) -> np.dtype:
+    try:
+        return np.dtype(token)
+    except TypeError:
+        import ml_dtypes  # bf16 wire codec: extension dtypes by name
+        return np.dtype(getattr(ml_dtypes, token))
+
+
+def pack_payload(payload) -> bytes:
+    """Serialise a wire-codec payload dict to bytes, bitwise-reversibly.
+
+    Per tensor: key, dtype token (endianness-explicit), shape, then the
+    raw C-order buffer.  Works for any codec's payload (data +
+    scalar/per-channel quantisation headers alike).
+    """
+    parts = [struct.pack("!B", len(payload))]
+    for key in sorted(payload):
+        arr = np.asarray(payload[key])
+        kb, db = key.encode(), _dtype_token(arr.dtype).encode()
+        raw = arr.tobytes(order="C")
+        parts += [struct.pack("!H", len(kb)), kb,
+                  struct.pack("!H", len(db)), db,
+                  struct.pack("!B", arr.ndim),
+                  struct.pack(f"!{arr.ndim}I", *arr.shape),
+                  struct.pack("!Q", len(raw)), raw]
+    return b"".join(parts)
+
+
+def unpack_payload(data: bytes) -> dict:
+    """Inverse of :func:`pack_payload` (numpy arrays, bitwise-equal)."""
+    (n,) = struct.unpack_from("!B", data, 0)
+    off = 1
+    out = {}
+    for _ in range(n):
+        (klen,) = struct.unpack_from("!H", data, off); off += 2
+        key = data[off:off + klen].decode(); off += klen
+        (dlen,) = struct.unpack_from("!H", data, off); off += 2
+        dtype = _dtype_from_token(data[off:off + dlen].decode()); off += dlen
+        (ndim,) = struct.unpack_from("!B", data, off); off += 1
+        shape = struct.unpack_from(f"!{ndim}I", data, off); off += 4 * ndim
+        (nbytes,) = struct.unpack_from("!Q", data, off); off += 8
+        out[key] = np.frombuffer(data[off:off + nbytes],
+                                 dtype=dtype).reshape(shape)
+        off += nbytes
+    return out
+
+
+def _send_frame(sock: socket.socket, mtype: int, body: bytes = b"",
+                lock: Optional[threading.Lock] = None) -> None:
+    data = struct.pack("!IB", len(body) + 1, mtype) + body
+    if lock is not None:
+        with lock:
+            sock.sendall(data)
+    else:
+        sock.sendall(data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return bytes(buf)
+
+
+def _recv_frame(sock: socket.socket):
+    """(message type, body) or (None, None) on a clean EOF."""
+    hdr = _recv_exact(sock, 4)
+    if hdr is None:
+        return None, None
+    (length,) = struct.unpack("!I", hdr)
+    data = _recv_exact(sock, length)
+    if data is None:
+        return None, None
+    return data[0], data[1:]
+
+
+# ---------------------------------------------------------------------------
+# The worker: one continuous-batching policy server
+# ---------------------------------------------------------------------------
+
+_SHUTDOWN = object()
+
+
+@dataclasses.dataclass
+class _Request:
+    conn: socket.socket
+    lock: threading.Lock
+    req_id: int
+    payload: dict
+
+
+class WorkerServer:
+    """One micro-batching policy server on a localhost TCP socket.
+
+    ``serve_batch_fn`` maps a stacked payload dict (leading batch axis on
+    every tensor, exactly ``repro.core.wire.stack_payloads``) to stacked
+    actions — the same callable :class:`~repro.serving.server.
+    BatchingPolicyServer` wraps in-process.
+
+    Admission is CONTINUOUS batching: the serve loop blocks for the first
+    request, then admits everything already queued (up to ``max_batch``)
+    and launches immediately — requests arriving while a batch is in
+    service queue up and form the next batch.  There is no ``max_wait``
+    hold: the in-service batch is the batching window, so a lone client
+    never waits out a timer (the batch-hold p95 dip the sims model away)
+    and a loaded server still amortises t(B).
+
+    A ``MSG_SHUTDOWN`` frame starts a graceful drain: every request
+    already received is served and answered, then the loop exits.
+    """
+
+    def __init__(self, serve_batch_fn: Callable, *, max_batch: int = 8,
+                 host: str = "127.0.0.1", port: int = 0):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1: {max_batch}")
+        self.serve_batch_fn = serve_batch_fn
+        self.max_batch = max_batch
+        self._host, self._port = host, port
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._draining = False
+        self._conns: list[socket.socket] = []
+        self.n_served = 0
+        self.batch_sizes: list[int] = []
+        self.addr: Optional[tuple[str, int]] = None
+
+    # ---- lifecycle ---------------------------------------------------------
+    def start(self) -> tuple[str, int]:
+        """Bind, listen, and serve on background threads; returns the
+        bound (host, port)."""
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((self._host, self._port))
+        self._listener.listen()
+        self.addr = self._listener.getsockname()
+        self._accept_t = threading.Thread(target=self._accept_loop,
+                                          daemon=True)
+        self._serve_t = threading.Thread(target=self._serve_loop, daemon=True)
+        self._accept_t.start()
+        self._serve_t.start()
+        return self.addr
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        """Block until the serve loop exits (graceful drain or stop)."""
+        self._serve_t.join(timeout)
+
+    def stop(self) -> None:
+        """Hard stop: abort the loop and drop every connection (used by
+        tests to simulate a worker crash without a process kill)."""
+        self._stop.set()
+        with contextlib.suppress(OSError):
+            self._listener.close()
+        for c in self._conns:
+            # shutdown() before close(): close() alone does not send FIN
+            # while another thread is blocked in recv() on the same socket,
+            # so peers would only notice via their request timeout
+            with contextlib.suppress(OSError):
+                c.shutdown(socket.SHUT_RDWR)
+            with contextlib.suppress(OSError):
+                c.close()
+
+    # ---- socket side -------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._conns.append(conn)
+            threading.Thread(target=self._reader, args=(conn,),
+                             daemon=True).start()
+
+    def _reader(self, conn: socket.socket) -> None:
+        lock = threading.Lock()
+        while not self._stop.is_set():
+            try:
+                mtype, body = _recv_frame(conn)
+            except OSError:
+                return
+            if mtype is None:
+                return
+            if mtype == MSG_SHUTDOWN:
+                self._q.put(_SHUTDOWN)
+                return
+            if mtype == MSG_REQ:
+                (req_id,) = struct.unpack_from("!I", body)
+                self._q.put(_Request(conn, lock, req_id,
+                                     unpack_payload(body[4:])))
+
+    # ---- the continuous-batching admission loop ----------------------------
+    def _admit(self) -> Optional[list[_Request]]:
+        """Next micro-batch, or None when stopped / drained.
+
+        Blocks for the first request, then sweeps the queue WITHOUT
+        waiting: whatever arrived during the previous batch's service is
+        admitted now (capped at ``max_batch``); later arrivals go to the
+        next batch.
+        """
+        batch: list[_Request] = []
+        while not batch:
+            if self._stop.is_set():
+                return None
+            try:
+                item = self._q.get(timeout=0.05)
+            except queue.Empty:
+                if self._draining:
+                    return None
+                continue
+            if item is _SHUTDOWN:
+                self._draining = True
+                continue
+            batch.append(item)
+        while len(batch) < self.max_batch:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is _SHUTDOWN:
+                self._draining = True
+                break
+            batch.append(item)
+        return batch
+
+    def _serve_loop(self) -> None:
+        while True:
+            batch = self._admit()
+            if batch is None:
+                break
+            self._serve(batch)
+        self._stop.set()
+        with contextlib.suppress(OSError):
+            self._listener.close()
+
+    def _serve(self, batch: list[_Request]) -> None:
+        stacked = {k: np.stack([r.payload[k] for r in batch])
+                   for k in batch[0].payload}
+        try:
+            out = np.asarray(self.serve_batch_fn(stacked))
+        except Exception as e:  # answer rather than hang the clients
+            msg = f"{type(e).__name__}: {e}".encode()[:2000]
+            for r in batch:
+                with contextlib.suppress(OSError):
+                    _send_frame(r.conn, MSG_ERR,
+                                struct.pack("!I", r.req_id) + msg, r.lock)
+            return
+        for i, r in enumerate(batch):
+            body = struct.pack("!IH", r.req_id, len(batch)) \
+                + pack_payload({"action": out[i]})
+            with contextlib.suppress(OSError):
+                _send_frame(r.conn, MSG_RESP, body, r.lock)
+        self.n_served += len(batch)
+        self.batch_sizes.append(len(batch))
+
+
+def _worker_main(manifest: dict, params, max_batch: int, conn,
+                 precompile: bool = True) -> None:
+    """Entry point of one spawned worker process.
+
+    Rebuilds the jitted server half from the deployment manifest (jitted
+    callables cannot cross a process boundary; the manifest + numpy
+    parameter pytree can), optionally pre-compiles every admissible batch
+    shape so the first live micro-batches are not compile-skewed, then
+    reports its bound (host, port) through ``conn`` and serves until a
+    SHUTDOWN frame drains it.
+    """
+    from repro.deploy import Deployment, DeploymentConfig  # noqa: import in child
+    cfg = DeploymentConfig.from_dict(manifest)
+    dep = Deployment.build(cfg)
+    serve = dep.server_batch_fn(params)
+    if precompile:
+        edge = dep.split.edge_step(
+            Deployment._split_params(params)["edge"],
+            np.zeros((1, cfg.in_h, cfg.in_w, cfg.spec.layers[0].c_in),
+                     np.float32))
+        # per-request payloads keep their leading 1-axis (stacking matches
+        # wire.stack_payloads: the micro-batch is (B, 1, ...))
+        example = {k: np.asarray(v) for k, v in edge.items()}
+        for b in range(1, max_batch + 1):
+            np.asarray(serve({k: np.stack([v] * b)
+                              for k, v in example.items()}))
+    ws = WorkerServer(serve, max_batch=max_batch)
+    conn.send(ws.start())
+    conn.close()
+    ws.join()
+
+
+# ---------------------------------------------------------------------------
+# The front door: router + retries over per-worker sockets
+# ---------------------------------------------------------------------------
+
+class FleetTimeout(Exception):
+    """A request exhausted its per-attempt timeout and retry budget."""
+
+
+class FleetError(Exception):
+    """The worker answered with an error frame."""
+
+
+class _Pending:
+    __slots__ = ("event", "result", "error", "batch")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.result = None
+        self.error = None
+        self.batch = 0
+
+
+class _ServerConn:
+    """One worker connection: framed send + a reader thread matching
+    responses to pending requests by id."""
+
+    def __init__(self, addr: tuple[str, int], *, connect_timeout_s: float):
+        self.addr = addr
+        self.sock = socket.create_connection(addr, timeout=connect_timeout_s)
+        self.sock.settimeout(None)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._send_lock = threading.Lock()
+        self._plock = threading.Lock()
+        self._pending: dict[int, _Pending] = {}
+        self.alive = True
+        self.n_sent = 0
+        threading.Thread(target=self._reader, daemon=True).start()
+
+    @property
+    def n_outstanding(self) -> int:
+        with self._plock:
+            return len(self._pending)
+
+    def request_async(self, req_id: int, payload_bytes: bytes) -> _Pending:
+        p = _Pending()
+        with self._plock:
+            self._pending[req_id] = p
+        try:
+            _send_frame(self.sock, MSG_REQ,
+                        struct.pack("!I", req_id) + payload_bytes,
+                        self._send_lock)
+        except OSError as e:
+            self.forget(req_id)
+            self._fail_all(ConnectionError(f"send to {self.addr}: {e}"))
+            raise ConnectionError(str(e)) from e
+        self.n_sent += 1
+        return p
+
+    def forget(self, req_id: int) -> None:
+        with self._plock:
+            self._pending.pop(req_id, None)
+
+    def _fail_all(self, err: Exception) -> None:
+        self.alive = False
+        with self._plock:
+            pending, self._pending = dict(self._pending), {}
+        for p in pending.values():
+            p.error = err
+            p.event.set()
+
+    def _reader(self) -> None:
+        while True:
+            try:
+                mtype, body = _recv_frame(self.sock)
+            except OSError as e:
+                self._fail_all(ConnectionError(f"recv from {self.addr}: {e}"))
+                return
+            if mtype is None:
+                self._fail_all(ConnectionError(
+                    f"worker at {self.addr} closed the connection"))
+                return
+            if mtype == MSG_RESP:
+                req_id, batch = struct.unpack_from("!IH", body)
+                with self._plock:
+                    p = self._pending.pop(req_id, None)
+                if p is not None:
+                    p.result = unpack_payload(body[6:])["action"]
+                    p.batch = batch
+                    p.event.set()
+            elif mtype == MSG_ERR:
+                (req_id,) = struct.unpack_from("!I", body)
+                with self._plock:
+                    p = self._pending.pop(req_id, None)
+                if p is not None:
+                    p.error = FleetError(body[4:].decode(errors="replace"))
+                    p.event.set()
+
+    def send_shutdown(self) -> None:
+        with contextlib.suppress(OSError):
+            _send_frame(self.sock, MSG_SHUTDOWN, b"", self._send_lock)
+
+    def close(self) -> None:
+        # shutdown() wakes our reader thread (close() alone would leave it
+        # blocked in recv and the fd open)
+        with contextlib.suppress(OSError):
+            self.sock.shutdown(socket.SHUT_RDWR)
+        with contextlib.suppress(OSError):
+            self.sock.close()
+
+
+class FleetClient:
+    """Routes requests to a set of live workers through the registered
+    routing policies, with per-request timeouts and bounded retries.
+
+    The router sees the same view the simulator gives it — per-server
+    outstanding counts as ``queue_lens`` and a busy/idle ``free`` estimate
+    (``now`` when idle, ``now + outstanding * est_service_s`` when busy;
+    wall-clock cannot observe a remote server's true free time).  A retry
+    excludes the failed server and re-routes; a connection error marks the
+    worker dead for all subsequent requests.
+    """
+
+    def __init__(self, addrs: Sequence[tuple[str, int]], *,
+                 router: Union[str, Router] = "round_robin",
+                 timeout_s: float = 10.0, retries: int = 2,
+                 est_service_s: float = 1e-3,
+                 connect_timeout_s: float = 10.0):
+        self.conns = [_ServerConn(a, connect_timeout_s=connect_timeout_s)
+                      for a in addrs]
+        self.set_router(router)
+        self.timeout_s = timeout_s
+        self.retries = retries
+        self.est_service_s = est_service_s
+        self._seq = itertools.count()       # routing sequence (sim's `seq`)
+        self._ids = itertools.count()       # wire request ids
+        self.stats = {"requests": 0, "retries": 0, "timeouts": 0,
+                      "errors": 0, "per_server": [0] * len(addrs),
+                      "max_served_batch": 0}
+
+    @property
+    def n_servers(self) -> int:
+        return len(self.conns)
+
+    def set_router(self, router: Union[str, Router]) -> None:
+        self.router = router
+        self._route = get_router(router)
+
+    def _pick(self, client: int, seq: int, tried: set) -> Optional[int]:
+        avail = [s for s in range(self.n_servers)
+                 if self.conns[s].alive and s not in tried]
+        if not avail:
+            return None
+        now = time.monotonic()
+        queue_lens = [c.n_outstanding for c in self.conns]
+        free = [now + queue_lens[s] * self.est_service_s
+                if queue_lens[s] else now for s in range(self.n_servers)]
+        s = self._route(client, seq, now, queue_lens, free)
+        if s in avail:
+            return s
+        # the registered routers know nothing about dead/excluded workers;
+        # snap to the least-loaded available one deterministically
+        return min(avail, key=lambda x: (queue_lens[x], x))
+
+    def request(self, payload, *, client: int = 0,
+                timeout_s: Optional[float] = None) -> np.ndarray:
+        """Send one request, wait for its action; retries re-route.
+
+        ``payload`` is a wire-codec payload dict (or pre-packed bytes —
+        the load generator packs once and reuses the buffer).
+        """
+        body = payload if isinstance(payload, bytes) else pack_payload(payload)
+        timeout = self.timeout_s if timeout_s is None else timeout_s
+        self.stats["requests"] += 1
+        tried: set[int] = set()
+        last_err: Optional[Exception] = None
+        seq = next(self._seq)
+        for attempt in range(self.retries + 1):
+            if attempt:
+                self.stats["retries"] += 1
+            s = self._pick(client, seq, tried)
+            if s is None:
+                break
+            req_id = next(self._ids)
+            try:
+                p = self.conns[s].request_async(req_id, body)
+            except ConnectionError as e:
+                last_err, tried = e, tried | {s}
+                continue
+            self.stats["per_server"][s] += 1
+            if not p.event.wait(timeout):
+                self.conns[s].forget(req_id)
+                self.stats["timeouts"] += 1
+                last_err = FleetTimeout(
+                    f"server {s} {self.conns[s].addr}: no response in "
+                    f"{timeout:.2f}s")
+                tried.add(s)
+                continue
+            if p.error is not None:
+                last_err, tried = p.error, tried | {s}
+                if isinstance(p.error, FleetError):
+                    self.stats["errors"] += 1
+                continue
+            self.stats["max_served_batch"] = max(
+                self.stats["max_served_batch"], p.batch)
+            return p.result
+        raise FleetTimeout(
+            f"request failed after {self.retries + 1} attempt(s) across "
+            f"servers {sorted(tried) or 'none-available'}: {last_err}") \
+            from last_err
+
+    def shutdown(self, *, wait_pending_s: float = 10.0) -> None:
+        """Graceful drain: SHUTDOWN every worker, wait for in-flight
+        responses, then close the sockets."""
+        for c in self.conns:
+            if c.alive:
+                c.send_shutdown()
+        deadline = time.monotonic() + wait_pending_s
+        for c in self.conns:
+            while c.alive and c.n_outstanding \
+                    and time.monotonic() < deadline:
+                time.sleep(0.01)
+        for c in self.conns:
+            c.close()
+
+
+# ---------------------------------------------------------------------------
+# The process manager
+# ---------------------------------------------------------------------------
+
+class RealFleet:
+    """``n_servers`` spawned worker processes + a routed front door.
+
+    Built from ONE deployment manifest dict and a numpy parameter pytree
+    (both picklable across the spawn boundary; each worker rebuilds its
+    jitted server half via ``Deployment.build``).  Use
+    :meth:`~repro.deploy.Deployment.fleet` to construct from a built
+    deployment, or this class directly with a manifest.
+    """
+
+    def __init__(self, manifest: dict, params, *, n_servers: int = 1,
+                 router: Union[str, Router] = "round_robin",
+                 max_batch: int = 8, timeout_s: float = 10.0,
+                 retries: int = 2, precompile: bool = True,
+                 mp_context: str = "spawn"):
+        if n_servers < 1:
+            raise ValueError(f"n_servers must be >= 1: {n_servers}")
+        self.manifest = dict(manifest)
+        self.params = params
+        self.n_servers = n_servers
+        self.router = router
+        self.max_batch = max_batch
+        self.timeout_s = timeout_s
+        self.retries = retries
+        self.precompile = precompile
+        self._mp_context = mp_context
+        self.processes: list = []
+        self.client: Optional[FleetClient] = None
+        self.closed = False
+
+    # ---- lifecycle ---------------------------------------------------------
+    def start(self, *, start_timeout_s: float = 120.0) -> "RealFleet":
+        """Spawn the workers, collect their ports, connect the client."""
+        import multiprocessing as mp
+        ctx = mp.get_context(self._mp_context)
+        pipes = []
+        for _ in range(self.n_servers):
+            parent_conn, child_conn = ctx.Pipe(duplex=False)
+            p = ctx.Process(target=_worker_main,
+                            args=(self.manifest, self.params, self.max_batch,
+                                  child_conn, self.precompile),
+                            daemon=True)
+            p.start()
+            child_conn.close()
+            self.processes.append(p)
+            pipes.append(parent_conn)
+        addrs = []
+        deadline = time.monotonic() + start_timeout_s
+        try:
+            for i, conn in enumerate(pipes):
+                # poll in short slices so a worker that died during startup
+                # fails the launch immediately instead of eating the full
+                # start timeout
+                while not conn.poll(0.2):
+                    p = self.processes[i]
+                    if not p.is_alive():
+                        raise RuntimeError(
+                            f"worker {i} (pid {p.pid}) died during startup "
+                            f"(exitcode={p.exitcode}); spawned workers "
+                            f"re-import the parent __main__ module — run "
+                            f"from a file/pytest, not stdin")
+                    if time.monotonic() > deadline:
+                        raise RuntimeError(
+                            f"worker {i} (pid {p.pid}) did not report a "
+                            f"port within {start_timeout_s:.0f}s")
+                addrs.append(conn.recv())
+                conn.close()
+        except BaseException:
+            self._kill_all()
+            raise
+        self.client = FleetClient(addrs, router=self.router,
+                                  timeout_s=self.timeout_s,
+                                  retries=self.retries)
+        return self
+
+    def __enter__(self) -> "RealFleet":
+        return self if self.client is not None else self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---- serving -----------------------------------------------------------
+    def request(self, payload, *, client: int = 0,
+                timeout_s: Optional[float] = None) -> np.ndarray:
+        if self.client is None:
+            raise RuntimeError("fleet not started (call start())")
+        return self.client.request(payload, client=client,
+                                   timeout_s=timeout_s)
+
+    def set_router(self, router: Union[str, Router]) -> None:
+        """Switch the front door's routing policy (workers are untouched —
+        routing is a parent-side decision, exactly as in the sim)."""
+        self.router = router
+        if self.client is not None:
+            self.client.set_router(router)
+
+    @property
+    def stats(self) -> dict:
+        return {} if self.client is None else self.client.stats
+
+    # ---- shutdown ----------------------------------------------------------
+    def _kill_all(self) -> None:
+        for p in self.processes:
+            if p.is_alive():
+                p.terminate()
+        for p in self.processes:
+            if p.is_alive():
+                p.join(timeout=2.0)
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=2.0)
+
+    def close(self, *, grace_s: float = 15.0) -> list[int]:
+        """Graceful shutdown: drain in-flight requests, join the workers.
+
+        Returns the PIDs of workers that did NOT exit gracefully and had
+        to be terminated — the CI leak gate asserts this is empty.
+        """
+        if self.closed:
+            return []
+        self.closed = True
+        if self.client is not None:
+            self.client.shutdown(wait_pending_s=grace_s)
+        deadline = time.monotonic() + grace_s
+        for p in self.processes:
+            p.join(timeout=max(0.1, deadline - time.monotonic()))
+        leaked = [p.pid for p in self.processes if p.is_alive()]
+        self._kill_all()
+        return leaked
+
+
+# ---------------------------------------------------------------------------
+# Open-loop load generation (the Table 6 protocol, for real)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoadReport:
+    """Latency sample from one :func:`run_load` run."""
+
+    latencies_s: np.ndarray        # decision latency per completed request
+    n_requests: int
+    n_failures: int
+    duration_s: float
+    failures: tuple = ()
+
+    def p95(self) -> float:
+        if self.latencies_s.size == 0:
+            return float("inf")
+        return float(np.percentile(self.latencies_s, 95))
+
+    def p50(self) -> float:
+        if self.latencies_s.size == 0:
+            return float("inf")
+        return float(np.percentile(self.latencies_s, 50))
+
+
+def run_load(client: FleetClient, payload, *, n_clients: int = 8,
+             rate_hz: float = 10.0, duration_s: float = 2.0,
+             timeout_s: Optional[float] = None) -> LoadReport:
+    """N clients issuing requests at a fixed rate against the fleet.
+
+    Mirrors ``QueueSim._request_arrivals``: clients are staggered by
+    ``period / n_clients`` and each issues every ``period`` seconds.
+    Latency is measured from the SCHEDULED observation time to response
+    receipt (so a backlog at the client counts against latency, exactly
+    as queueing does in the sim).  The payload is packed once and the
+    same bytes are reused for every request — load generation must not
+    contend with the workers for compute.
+    """
+    body = payload if isinstance(payload, bytes) else pack_payload(payload)
+    period = 1.0 / rate_hz
+    t_start = time.monotonic() + 0.05
+    lats: list[float] = []
+    failures: list[tuple] = []
+
+    def client_loop(c: int) -> None:
+        t_k = t_start + c * period / n_clients
+        while t_k < t_start + duration_s:
+            now = time.monotonic()
+            if now < t_k:
+                time.sleep(t_k - now)
+            try:
+                client.request(body, client=c, timeout_s=timeout_s)
+                lats.append(time.monotonic() - t_k)
+            except (FleetTimeout, FleetError, ConnectionError) as e:
+                failures.append((c, t_k - t_start, repr(e)))
+            t_k += period
+
+    threads = [threading.Thread(target=client_loop, args=(c,))
+               for c in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return LoadReport(latencies_s=np.asarray(sorted(lats), float),
+                      n_requests=len(lats) + len(failures),
+                      n_failures=len(failures), duration_s=duration_s,
+                      failures=tuple(failures))
+
+
+__all__ = ["FleetClient", "FleetError", "FleetTimeout", "LoadReport",
+           "RealFleet", "WorkerServer", "pack_payload", "run_load",
+           "unpack_payload", "MSG_REQ", "MSG_RESP", "MSG_ERR",
+           "MSG_SHUTDOWN"]

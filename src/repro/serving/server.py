@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -33,8 +34,15 @@ class PolicyServer:
     serve_fn: Callable
     service_time_s: Optional[float] = None
 
-    def measure(self, example_payload, *, iters: int = 20) -> float:
-        self.serve_fn(example_payload)  # compile
+    def measure(self, example_payload, *, iters: int = 20,
+                warmup: int = 2) -> float:
+        # compile + warmup, BLOCKED before the clock starts: jax dispatch
+        # is async, so an unblocked warmup bleeds into the timed region
+        # and the first timed iterations pay cache-cold costs
+        out = self.serve_fn(example_payload)
+        for _ in range(warmup):
+            out = self.serve_fn(example_payload)
+        _block(out)
         t0 = time.perf_counter()
         for _ in range(iters):
             out = self.serve_fn(example_payload)
@@ -56,12 +64,26 @@ class BatchServiceModel:
     """Measured batched service-time curve t(B), piecewise-linear.
 
     ``points`` are (batch_size, seconds) samples sorted by batch size;
-    queries between samples interpolate, queries past the largest sample
-    extrapolate with the marginal per-request cost of the last segment
-    (the asymptotic regime where fixed launch overhead is amortised).
+    queries between samples interpolate.  Queries past the largest
+    measured sample are OUT OF RANGE and handled per ``out_of_range``:
+
+    * ``"extrapolate"`` (default) — continue with the marginal
+      per-request cost of the last segment (the asymptotic regime where
+      fixed launch overhead is amortised), warning ONCE per model that
+      the value is extrapolated, not measured;
+    * ``"clamp"`` — return t(max measured B), warning once;
+    * ``"raise"`` — refuse with ``ValueError``.
+
+    The silent-extrapolation default fed the sims (and the real-fleet
+    calibration gate) unmeasured numbers whenever a batch exceeded the
+    measured range; the real fleet caps its admission at
+    :attr:`max_measured_batch` instead (see ``Deployment.fleet``).
     """
 
     points: tuple[tuple[int, float], ...]
+    out_of_range: str = "extrapolate"
+    _warned: bool = dataclasses.field(default=False, compare=False,
+                                      repr=False)
 
     def __post_init__(self):
         if not self.points:
@@ -69,17 +91,46 @@ class BatchServiceModel:
         bs = [b for b, _ in self.points]
         if bs != sorted(set(bs)):
             raise ValueError(f"points must be sorted/unique in batch: {bs}")
+        if self.out_of_range not in ("extrapolate", "clamp", "raise"):
+            raise ValueError(f"out_of_range must be extrapolate|clamp|raise,"
+                             f" got {self.out_of_range!r}")
+
+    @property
+    def max_measured_batch(self) -> int:
+        """Largest batch size the curve was actually measured at."""
+        return self.points[-1][0]
+
+    def _out_of_range(self, batch: int) -> float:
+        bs = np.array([b for b, _ in self.points], float)
+        ts = np.array([t for _, t in self.points], float)
+        if self.out_of_range == "raise":
+            raise ValueError(
+                f"t({batch}) is beyond the measured range (largest "
+                f"measured B={self.max_measured_batch}); re-measure with "
+                f"larger batch_sizes or use out_of_range='extrapolate'")
+        if not self._warned:
+            object.__setattr__(self, "_warned", True)
+            how = ("clamped to t(max)" if self.out_of_range == "clamp"
+                   else "extrapolated")
+            warnings.warn(
+                f"BatchServiceModel: t({batch}) queried beyond the measured "
+                f"range (largest measured B={self.max_measured_batch}); "
+                f"{how}, not a measurement",
+                RuntimeWarning, stacklevel=3)
+        if self.out_of_range == "clamp":
+            return float(ts[-1])
+        if len(bs) > 1:
+            slope = (ts[-1] - ts[-2]) / (bs[-1] - bs[-2])
+        else:
+            slope = ts[-1] / bs[-1]
+        return float(ts[-1] + slope * (batch - bs[-1]))
 
     def __call__(self, batch: int) -> float:
         bs = np.array([b for b, _ in self.points], float)
         ts = np.array([t for _, t in self.points], float)
         if batch <= bs[-1]:
             return float(np.interp(batch, bs, ts))
-        if len(bs) > 1:
-            slope = (ts[-1] - ts[-2]) / (bs[-1] - bs[-2])
-        else:
-            slope = ts[-1] / bs[-1]
-        return float(ts[-1] + slope * (batch - bs[-1]))
+        return self._out_of_range(batch)
 
 
 @dataclasses.dataclass
@@ -109,7 +160,7 @@ class BatchingPolicyServer:
 
     def measure(self, example_payload, *,
                 batch_sizes: Sequence[int] = (1, 2, 4, 8),
-                iters: int = 10) -> dict[int, float]:
+                iters: int = 10, warmup: int = 2) -> dict[int, float]:
         """Measure t(B) on this host for each micro-batch size."""
         import jax
         import jax.numpy as jnp
@@ -118,7 +169,12 @@ class BatchingPolicyServer:
             batch = jax.tree.map(
                 lambda a: jnp.broadcast_to(a[None], (b,) + a.shape),
                 example_payload)
-            self.serve_batch_fn(batch)  # compile
+            # compile + warmup, blocked before the clock starts (async
+            # dispatch would otherwise bleed into the timed region)
+            out = self.serve_batch_fn(batch)
+            for _ in range(warmup):
+                out = self.serve_batch_fn(batch)
+            _block(out)
             t0 = time.perf_counter()
             for _ in range(iters):
                 out = self.serve_batch_fn(batch)
@@ -127,10 +183,12 @@ class BatchingPolicyServer:
         self.service_times_s = times
         return times
 
-    def service_model(self) -> BatchServiceModel:
+    def service_model(self, *,
+                      out_of_range: str = "extrapolate") -> BatchServiceModel:
         if not self.service_times_s:
             raise ValueError("call measure() first")
-        return BatchServiceModel(tuple(sorted(self.service_times_s.items())))
+        return BatchServiceModel(tuple(sorted(self.service_times_s.items())),
+                                 out_of_range=out_of_range)
 
 
 @dataclasses.dataclass

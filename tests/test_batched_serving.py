@@ -269,7 +269,9 @@ def test_service_model_interpolation_and_extrapolation():
     assert model(1) == pytest.approx(0.010)
     assert model(2) == pytest.approx(0.012)
     assert model(4) == pytest.approx(0.016)
-    assert model(8) == pytest.approx(0.016 + 4 * 0.002)   # marginal slope
+    # past the measured range the value is extrapolated, no longer silent
+    with pytest.warns(RuntimeWarning, match="beyond the measured range"):
+        assert model(8) == pytest.approx(0.016 + 4 * 0.002)  # marginal slope
     with pytest.raises(ValueError):
         BatchServiceModel(())
     with pytest.raises(ValueError):

@@ -1,6 +1,8 @@
 """Serving runtime: shaped link determinism/FIFO, queue simulation
 monotonicity, and agreement between DecisionLoop and the paper's
 analytic latency model."""
+import warnings
+
 import numpy as np
 import pytest
 
@@ -10,9 +12,10 @@ from hypothesis import given, settings, strategies as st
 from repro.core.latency import (LinkModel, SplitConfig,
                                 decision_latency_server_only,
                                 decision_latency_split)
-from repro.serving.client import DecisionLoop
+from repro.serving.client import DecisionLoop, EdgeClient
 from repro.serving.netsim import ShapedLink, shaped
-from repro.serving.server import BatchQueueSim, BatchServiceModel, QueueSim
+from repro.serving.server import (BatchingPolicyServer, BatchQueueSim,
+                                  BatchServiceModel, PolicyServer, QueueSim)
 
 
 def test_link_tx_time():
@@ -93,6 +96,72 @@ def test_table6_pins_with_serialised_downlink():
                         payload_bytes=10_000, rate_hz=10.0, horizon_s=5.0,
                         max_batch=8, service_model=model)
     assert bat.max_clients(p95_budget_s=0.1, n_max=256) == 54
+
+
+def test_jitter_delays_arrival_not_link_occupancy():
+    """Regression for the jitter double-count: jitter is extra propagation
+    delay on ONE transfer's arrival (tc-netem semantics) — it never
+    occupies the link, so back-to-back sends under jitter still serialise
+    at exactly tx_time spacing."""
+    link = ShapedLink(bandwidth_bps=8e6, propagation_s=0.001,
+                      jitter_s=0.010)
+    tx = link.tx_time(500_000)                     # 0.5 s each
+    traces = [link.send(0.0, 500_000) for _ in range(3)]
+    assert [t.start for t in traces] == pytest.approx([0.0, tx, 2 * tx])
+    assert [t.tx_done - t.start for t in traces] == pytest.approx([tx] * 3)
+    # jitter shows up ONLY on arrival, cycling 0.5x/1.0x/1.5x with mean
+    # exactly jitter_s (the old (n%3)/2 pattern averaged jitter_s/2 AND
+    # leaked into _busy_until)
+    jit = [t.arrival - t.tx_done - link.propagation_s for t in traces]
+    assert jit == pytest.approx([0.005, 0.010, 0.015])
+    assert float(np.mean(jit)) == pytest.approx(link.jitter_s)
+
+
+def test_service_model_out_of_range_modes():
+    pts = ((1, 0.008), (2, 0.009), (4, 0.011))
+    model = BatchServiceModel(pts)
+    assert model.max_measured_batch == 4
+    with pytest.warns(RuntimeWarning, match="beyond the measured range"):
+        v = model(8)
+    assert v == pytest.approx(0.011 + 4 * 0.001)   # last-segment slope
+    with warnings.catch_warnings():                # warns ONCE per model
+        warnings.simplefilter("error")
+        model(16)
+    clamp = BatchServiceModel(pts, out_of_range="clamp")
+    with pytest.warns(RuntimeWarning, match="clamped"):
+        assert clamp(100) == pytest.approx(0.011)
+    strict = BatchServiceModel(pts, out_of_range="raise")
+    assert strict(4) == pytest.approx(0.011)       # in-range untouched
+    with pytest.raises(ValueError, match="beyond the measured range"):
+        strict(5)
+    with pytest.raises(ValueError):
+        BatchServiceModel(pts, out_of_range="nope")
+
+
+def test_measure_warmup_and_blocking_call_counts():
+    """Every measure loop runs compile + ``warmup`` calls BEFORE the clock
+    and `iters` calls inside it — the warmup is what absorbs async-dispatch
+    and cache-cold skew."""
+    n = [0]
+
+    def count_fn(_):
+        n[0] += 1
+        return np.zeros(2)
+
+    PolicyServer(count_fn).measure(None, iters=5, warmup=3)
+    assert n[0] == 1 + 3 + 5
+
+    n[0] = 0
+    EdgeClient(encode_fn=count_fn, wire_bytes=1).measure(None, iters=4,
+                                                         warmup=2)
+    assert n[0] == 1 + 2 + 4
+
+    import jax.numpy as jnp
+    n[0] = 0
+    srv = BatchingPolicyServer(serve_batch_fn=count_fn, max_batch=4)
+    srv.measure({"data": jnp.ones((2,))}, batch_sizes=(1, 2), iters=3,
+                warmup=2)
+    assert n[0] == 2 * (1 + 2 + 3)
 
 
 def test_scalability_split_serves_more_clients():
