@@ -14,7 +14,12 @@ curve t(B) is measured in-process first (that curve drives the sim AND
 caps real-fleet admission at its largest measured batch), the uplink is
 modelled as the measured localhost loopback (effectively unshaped), and
 the SAME open-loop load (N clients at ``--rate-hz``, the Table 6
-protocol) is applied to the simulator and to the live fleet.
+protocol) is applied to the simulator and to the live fleet.  With
+``--shaped-mbps R`` every worker token-bucket-shapes its request ingress
+at R Mb/s (``repro.serving.realfleet.ShapingConfig``) and the sim uplink
+is modelled at the same rate — calibrating the shaped-uplink sim cells
+against a real bottleneck instead of raw loopback; the shaping config is
+stamped into every row and the artifact header.
 
 Rows are written to ``BENCH_realfleet.json`` stamped with
 ``transport: "socket"`` (``repro.perfstamp``): measured-fleet artifacts
@@ -43,7 +48,7 @@ from repro import perfstamp
 from repro.deploy import Deployment, DeploymentConfig
 from repro.serving.fleet import router_names
 from repro.serving.netsim import shaped
-from repro.serving.realfleet import pack_payload, run_load
+from repro.serving.realfleet import ShapingConfig, pack_payload, run_load
 
 ARTIFACT = "BENCH_realfleet.json"
 
@@ -66,12 +71,18 @@ def small_config(*, n_servers: int = 2,
 def calibrate(cfg: DeploymentConfig, *, n_servers_list=(1, 2),
               routers=None, n_clients: int = 4, rate_hz: float = 20.0,
               duration_s: float = 1.5, seed: int = 0,
-              timeout_s: float = 30.0) -> list[dict]:
+              timeout_s: float = 30.0,
+              shaped_mbps: float = None) -> list[dict]:
     """Measured vs predicted p95 per (n_servers, router) cell.
 
     ONE fleet is spawned per fleet size and re-used across routers
     (routing is a parent-side decision, exactly as in the sim), so the
     spawn + jit cost is paid once per size, not once per cell.
+
+    ``shaped_mbps`` token-bucket-shapes every worker's request ingress
+    (``repro.serving.realfleet.ShapingConfig``) and models the sim
+    uplink at the same rate — the shaped-uplink cells are then measured
+    against a sim of the SAME bottleneck, not raw loopback.
     """
     dep = Deployment.build(cfg)
     params = dep.init(jax.random.PRNGKey(seed))
@@ -88,18 +99,26 @@ def calibrate(cfg: DeploymentConfig, *, n_servers_list=(1, 2),
     curve = " ".join(f"t({b})={t*1e3:.2f}ms" for b, t in sorted(times.items()))
     print(f"  measured service curve: {curve}")
 
+    shaping = (None if shaped_mbps is None
+               else ShapingConfig(rate_mbps=shaped_mbps))
+    uplink_mbps = LOOPBACK_MBPS if shaped_mbps is None else shaped_mbps
+    uplink_rtt_ms = LOOPBACK_RTT_MS if shaped_mbps is None else 2.0
+    if shaping is not None:
+        print(f"  ingress shaping: {shaping.rate_mbps} Mb/s token bucket, "
+              f"burst {shaping.burst_bytes} B (sim uplink matched)")
+
     routers = tuple(routers) if routers else router_names()
     rows = []
     for ns in sorted(set(n_servers_list)):
         fleet = dep.fleet(params, n_servers=ns, service_model=model,
-                          timeout_s=timeout_s)
+                          timeout_s=timeout_s, shaping=shaping)
         fleet_rows = []
         try:
             for router in routers:
                 fleet.set_router(router)
                 sim = dep.fleet_sim(
-                    model, uplink=shaped(LOOPBACK_MBPS,
-                                         rtt_ms=LOOPBACK_RTT_MS),
+                    model, uplink=shaped(uplink_mbps,
+                                         rtt_ms=uplink_rtt_ms),
                     rate_hz=rate_hz, horizon_s=duration_s, n_servers=ns,
                     router=router, max_batch=fleet.max_batch,
                     max_wait_s=0.0)
@@ -110,6 +129,8 @@ def calibrate(cfg: DeploymentConfig, *, n_servers_list=(1, 2),
                     "n_servers": ns, "router": router,
                     "n_clients": n_clients, "rate_hz": rate_hz,
                     "duration_s": duration_s,
+                    "shaping": None if shaping is None
+                    else shaping.to_dict(),
                     "n_requests": rep.n_requests,
                     "n_failures": rep.n_failures,
                     "predicted_p95_ms": predicted * 1e3,
@@ -135,9 +156,13 @@ def calibrate(cfg: DeploymentConfig, *, n_servers_list=(1, 2),
 
 
 def write_artifact(rows: list[dict], cfg: DeploymentConfig,
-                   *, path: str = ARTIFACT) -> dict:
+                   *, path: str = ARTIFACT,
+                   shaping: ShapingConfig = None) -> dict:
     doc = perfstamp.stamp({"kind": "realfleet_calibration",
-                           "config": cfg.to_dict(), "rows": rows},
+                           "config": cfg.to_dict(),
+                           "shaping": None if shaping is None
+                           else shaping.to_dict(),
+                           "rows": rows},
                           backend=cfg.backend, transport="socket")
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -202,6 +227,10 @@ def main(argv=None):
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--rate-hz", type=float, default=20.0)
     ap.add_argument("--duration-s", type=float, default=1.5)
+    ap.add_argument("--shaped-mbps", type=float, default=None,
+                    help="token-bucket-shape worker request ingress at "
+                         "this rate and model the sim uplink to match "
+                         "(default: unshaped loopback)")
     ap.add_argument("--smoke", action="store_true",
                     help="bounded CI gate: measured p95 within tolerance "
                          "of the FleetQueueSim prediction, no failed "
@@ -225,8 +254,11 @@ def main(argv=None):
 
     rows = calibrate(cfg, n_servers_list=sizes, routers=routers,
                      n_clients=args.clients, rate_hz=args.rate_hz,
-                     duration_s=args.duration_s)
-    write_artifact(rows, cfg, path=args.out)
+                     duration_s=args.duration_s,
+                     shaped_mbps=args.shaped_mbps)
+    write_artifact(rows, cfg, path=args.out,
+                   shaping=None if args.shaped_mbps is None
+                   else ShapingConfig(rate_mbps=args.shaped_mbps))
     if args.smoke:
         ok = smoke_gate(rows, tol_rel=args.tol_rel,
                         tol_abs_ms=args.tol_abs_ms)

@@ -535,11 +535,49 @@ class Deployment:
             n_servers=cfg.n_servers if n_servers is None else n_servers,
             router=cfg.router if router is None else router)
 
+    def scenario_sim(self, scenario, *,
+                     n_servers: Optional[int] = None,
+                     router: Optional[str] = None,
+                     max_batch: Optional[int] = None,
+                     max_wait_s: Optional[float] = None,
+                     adaptation: str = "none",
+                     service_model: Optional[Callable[[int], float]] = None):
+        """This deployment under a named (or inline) :class:`Scenario`.
+
+        The scenario supplies the serving CONDITION — its seeded link,
+        its device zoo (one t(B) curve per server, cycled from the
+        profile registry), client population/rate and adaptation-mode
+        ladder — while the manifest supplies the deployment: payload
+        bytes (``wire_bytes``), micro-batching policy and fleet shape,
+        with the same keyword-override precedence as :meth:`fleet_sim`.
+        ``adaptation`` picks the controller (``"none"``, ``"rule"``,
+        ``"static:<i>"`` or anything registered via
+        ``repro.serving.scenario.register_adaptation``); a measured
+        ``service_model`` overrides the zoo on every server.  Returns a
+        :class:`~repro.serving.scenario.ScenarioFleetSim` — call
+        ``.report(n_clients)`` for latencies, uplink bytes and the
+        delivered-return proxy.
+        """
+        from repro.serving.scenario import get_scenario
+        sc = get_scenario(scenario)
+        cfg = self.config
+        ns = cfg.n_servers if n_servers is None else n_servers
+        return sc.sim(
+            self.wire_bytes, n_servers=ns,
+            router=cfg.router if router is None else router,
+            max_batch=cfg.max_batch if max_batch is None else max_batch,
+            max_wait_s=cfg.max_wait_ms / 1e3 if max_wait_s is None
+            else max_wait_s,
+            adaptation=adaptation,
+            service_models=None if service_model is None
+            else (service_model,) * ns)
+
     def fleet(self, params, *, n_servers: Optional[int] = None,
               router: Optional[str] = None, max_batch: Optional[int] = None,
               service_model: Optional[Callable[[int], float]] = None,
               timeout_s: float = 10.0, retries: int = 2,
-              precompile: bool = True, start: bool = True):
+              precompile: bool = True, start: bool = True,
+              shaping=None):
         """A REAL multi-process fleet for THIS deployment (localhost).
 
         The counterpart of :meth:`fleet_sim`: ``n_servers`` spawned
@@ -555,6 +593,10 @@ class Deployment:
         max_measured_batch` — the real fleet never serves batch sizes the
         t(B) curve only extrapolates, so the sim-vs-real calibration
         compares measured numbers on both sides.
+
+        ``shaping`` (a :class:`~repro.serving.realfleet.ShapingConfig`
+        or its dict) token-bucket-shapes every worker's request ingress —
+        the measured counterpart of the sims' shaped uplink.
 
         Returns a started :class:`~repro.serving.realfleet.RealFleet`
         (``start=False`` defers the spawn); always ``close()`` it — the
@@ -573,7 +615,7 @@ class Deployment:
             n_servers=cfg.n_servers if n_servers is None else n_servers,
             router=cfg.router if router is None else router,
             max_batch=max(1, cap), timeout_s=timeout_s, retries=retries,
-            precompile=precompile)
+            precompile=precompile, shaping=shaping)
         return fl.start() if start else fl
 
 
@@ -631,6 +673,27 @@ def _real_fleet_check(cfg: DeploymentConfig, *, n_requests: int = 8,
           f"no leaked workers")
 
 
+def _scenario_report(dep: "Deployment", name: str) -> None:
+    """Run one registered scenario against this deployment and print the
+    static-vs-adaptive scorecard (sim only — no processes spawned)."""
+    from repro.serving.scenario import get_scenario
+    sc = get_scenario(name)
+    print(f"  scenario {sc.name}: link={sc.link_kind} seed={sc.seed} "
+          f"devices={','.join(sc.devices)} N={sc.n_clients} "
+          f"rate={sc.rate_hz}Hz horizon={sc.horizon_s}s "
+          f"deadline={sc.deadline_s * 1e3:.0f}ms")
+    policies = ([f"static:{i}" for i in range(len(sc.modes))]
+                + (["rule"] if len(sc.modes) > 1 else []))
+    for adapt in policies:
+        rep = dep.scenario_sim(sc, adaptation=adapt).report(sc.n_clients)
+        modes = " ".join(f"{k}={v}" for k, v in rep.mode_counts().items()
+                         if v)
+        print(f"    {adapt:<9} p95={rep.p95_s * 1e3:8.2f}ms "
+              f"mean={rep.mean_s * 1e3:7.2f}ms "
+              f"return={rep.delivered_return:.4f} "
+              f"bytes={rep.total_uplink_bytes / 1e6:.3f}MB  [{modes}]")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Build the standard deployment config, write its "
@@ -664,6 +727,12 @@ def main(argv=None):
                          "and shut down cleanly")
     ap.add_argument("--fleet-requests", type=int, default=8,
                     help="requests served during the --real-fleet check")
+    ap.add_argument("--scenario", default=None,
+                    help="run the manifest through a registered serving "
+                         "scenario (repro.serving.scenario: seeded "
+                         "adversarial link + device zoo) and print the "
+                         "no-adaptation / per-static-mode / rule-"
+                         "controller comparison")
     args = ap.parse_args(argv)
 
     cfg = DeploymentConfig.standard(k=args.k, c_in=args.c_in, h=args.x,
@@ -700,6 +769,8 @@ def main(argv=None):
               "outputs and wire payloads")
     if args.real_fleet:
         _real_fleet_check(reloaded, n_requests=args.fleet_requests)
+    if args.scenario:
+        _scenario_report(dep, args.scenario)
 
 
 if __name__ == "__main__":

@@ -22,7 +22,28 @@ Module map
 ``netsim``
     Deterministic bandwidth-shaped link (the ``tc netem`` stand-in):
     :class:`ShapedLink` serialises transfers FIFO with finite bandwidth,
-    propagation delay and optional deterministic jitter.
+    propagation delay and optional deterministic jitter.  Plus the
+    scenario engine's adversarial family — :class:`TraceLink`
+    (trace-driven piecewise bandwidth, integrated across regime
+    boundaries), :class:`MarkovLink` (seeded Wi-Fi-style regime
+    switching), :class:`LossyLink` (Bernoulli loss + RTO retransmit,
+    head-of-line blocking), :class:`StochasticJitterLink` — every
+    stochastic link replays bitwise from its seed on ``reset()``, and
+    ``LINK_KINDS``/``make_link`` name link shapes for JSON schemas.
+``profiles``
+    The device zoo: :class:`DeviceProfile` names one hardware class
+    (Jetson Nano / Pi 4B / Pi Zero 2W / workstation t(B) curves + encode
+    cost); ``zoo`` cycles profiles across a fleet's servers.
+``scenario``
+    Named serving CONDITIONS: frozen, JSON-round-trippable
+    :class:`Scenario` (seeded link + device zoo + client population +
+    adaptation-mode ladder) in the ``SCENARIOS`` registry;
+    :class:`ScenarioFleetSim` runs one through the fleet engine with a
+    per-client adaptation controller (``"none"`` / ``"rule"`` /
+    ``register_adaptation``) and scores latency, uplink bytes and the
+    delivered-return proxy.  Drive from a manifest via
+    ``Deployment.scenario_sim`` or ``python -m repro.deploy --scenario``;
+    sweep via ``benchmarks/scenarios.py``.
 ``client``
     On-device half: :class:`EdgeClient` (the deployment's ``edge_fn`` —
     fused encoder + wire codec — with single and batched measurement) and
@@ -57,7 +78,9 @@ Module map
     per-request timeouts and re-routing retries.  ``run_load`` drives the
     Table 6 open-loop protocol against it so measured p95 can be
     calibrated against :class:`FleetQueueSim` predictions
-    (``benchmarks/realfleet.py``).  Construct via
+    (``benchmarks/realfleet.py``).  Workers optionally token-bucket-shape
+    request ingress (:class:`ShapingConfig` / :class:`TokenBucket`) — the
+    measured counterpart of the sims' shaped uplink.  Construct via
     :meth:`repro.deploy.Deployment.fleet`.
 
 The batched request path end-to-end: each client encodes ONE frame
@@ -67,19 +90,37 @@ survive stacking), and the server decodes + projects the whole
 micro-batch in one call (``Deployment.server_batch_fn`` /
 ``SplitModel.server_step_batch``).
 """
-from repro.serving.netsim import ShapedLink, LinkTrace
+from repro.serving.netsim import (LINK_KINDS, LinkTrace, LossyLink,
+                                  MarkovLink, ShapedLink,
+                                  StochasticJitterLink, TraceLink,
+                                  make_link, register_link_kind)
 from repro.serving.server import (BatchingPolicyServer, BatchQueueSim,
                                   BatchServiceModel, PolicyServer, QueueSim)
 from repro.serving.fleet import (FleetQueueSim, ROUTERS, get_router,
                                  register_router, router_names)
 from repro.serving.client import EdgeClient, DecisionLoop
+from repro.serving.profiles import (DEVICE_PROFILES, DeviceProfile,
+                                    get_profile, register_profile, zoo)
+from repro.serving.scenario import (ADAPTATIONS, SCENARIOS, AdaptationMode,
+                                    Scenario, ScenarioFleetSim,
+                                    ScenarioReport, get_adaptation,
+                                    get_scenario, register_adaptation,
+                                    register_scenario, scenario_names)
 from repro.serving.realfleet import (FleetClient, FleetError, FleetTimeout,
-                                     LoadReport, RealFleet, WorkerServer,
+                                     LoadReport, RealFleet, ShapingConfig,
+                                     TokenBucket, WorkerServer,
                                      pack_payload, run_load, unpack_payload)
 
-__all__ = ["ShapedLink", "LinkTrace", "PolicyServer", "BatchingPolicyServer",
+__all__ = ["ShapedLink", "LinkTrace", "TraceLink", "MarkovLink",
+           "LossyLink", "StochasticJitterLink", "LINK_KINDS", "make_link",
+           "register_link_kind", "PolicyServer", "BatchingPolicyServer",
            "BatchServiceModel", "BatchQueueSim", "QueueSim", "FleetQueueSim",
            "ROUTERS", "get_router", "register_router", "router_names",
-           "EdgeClient", "DecisionLoop", "FleetClient", "FleetError",
-           "FleetTimeout", "LoadReport", "RealFleet", "WorkerServer",
-           "pack_payload", "run_load", "unpack_payload"]
+           "EdgeClient", "DecisionLoop", "DeviceProfile", "DEVICE_PROFILES",
+           "get_profile", "register_profile", "zoo", "Scenario",
+           "SCENARIOS", "ScenarioFleetSim", "ScenarioReport",
+           "AdaptationMode", "ADAPTATIONS", "register_scenario",
+           "get_scenario", "scenario_names", "register_adaptation",
+           "get_adaptation", "FleetClient", "FleetError", "FleetTimeout",
+           "LoadReport", "RealFleet", "ShapingConfig", "TokenBucket",
+           "WorkerServer", "pack_payload", "run_load", "unpack_payload"]

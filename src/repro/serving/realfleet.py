@@ -156,6 +156,75 @@ def _recv_frame(sock: socket.socket):
 _SHUTDOWN = object()
 
 
+# ---------------------------------------------------------------------------
+# Ingress shaping: token-bucket on the worker's request path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapingConfig:
+    """Token-bucket ingress shaping for one worker's socket.
+
+    The sims model a bandwidth-shaped uplink in front of the fleet; raw
+    localhost loopback has none, so calibration cells were only ever
+    measured unshaped (the PR 7 caveat).  This config shapes each
+    worker's REQUEST ingress to ``rate_mbps`` with a ``burst_bytes``
+    bucket — the tc-tbf stand-in — and is stamped into
+    ``BENCH_realfleet.json`` so shaped and unshaped measurements never
+    get conflated.
+    """
+    rate_mbps: float
+    burst_bytes: int = 16384
+
+    def __post_init__(self):
+        if self.rate_mbps <= 0.0:
+            raise ValueError(f"rate_mbps must be > 0: {self.rate_mbps}")
+        if self.burst_bytes < 1:
+            raise ValueError(f"burst_bytes must be >= 1: {self.burst_bytes}")
+
+    def to_dict(self) -> dict:
+        return {"rate_mbps": self.rate_mbps,
+                "burst_bytes": self.burst_bytes}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShapingConfig":
+        return cls(rate_mbps=float(d["rate_mbps"]),
+                   burst_bytes=int(d.get("burst_bytes", 16384)))
+
+    def bucket(self) -> "TokenBucket":
+        return TokenBucket(rate_bps=self.rate_mbps * 1e6,
+                           burst_bytes=self.burst_bytes)
+
+
+class TokenBucket:
+    """Thread-safe GCRA token bucket: ``reserve(nbytes)`` returns how
+    long the caller must sleep before admitting ``nbytes``.
+
+    Virtual-scheduling form: ``_tat`` is the theoretical arrival time of
+    the NEXT conforming byte; a reservation pushes it forward by the
+    payload's transmission time at ``rate_bps`` and the caller waits
+    until the new ``_tat`` minus the burst allowance.  An idle bucket
+    regains its full burst; the first ``burst_bytes`` always pass
+    unshaped.  ``clock`` is injectable so tests run on virtual time.
+    """
+
+    def __init__(self, *, rate_bps: float, burst_bytes: int,
+                 clock: Callable[[], float] = time.monotonic):
+        if rate_bps <= 0.0:
+            raise ValueError(f"rate_bps must be > 0: {rate_bps}")
+        self._bytes_per_s = rate_bps / 8.0
+        self._burst_s = burst_bytes / self._bytes_per_s
+        self._tat = -np.inf          # full burst available at t=0
+        self._clock = clock
+        self._lock = threading.Lock()
+
+    def reserve(self, nbytes: int) -> float:
+        with self._lock:
+            now = self._clock()
+            tat = max(self._tat, now)
+            self._tat = tat + nbytes / self._bytes_per_s
+            return max(0.0, self._tat - self._burst_s - now)
+
+
 @dataclasses.dataclass
 class _Request:
     conn: socket.socket
@@ -185,11 +254,14 @@ class WorkerServer:
     """
 
     def __init__(self, serve_batch_fn: Callable, *, max_batch: int = 8,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 shaper: Optional[TokenBucket] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1: {max_batch}")
         self.serve_batch_fn = serve_batch_fn
         self.max_batch = max_batch
+        self.shaper = shaper
+        self.shaped_sleep_s = 0.0
         self._host, self._port = host, port
         self._q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
@@ -259,6 +331,15 @@ class WorkerServer:
                 self._q.put(_SHUTDOWN)
                 return
             if mtype == MSG_REQ:
+                if self.shaper is not None:
+                    # ingress shaping: hold the frame (and, like a backed-
+                    # up pipe, everything behind it on this connection)
+                    # until the bucket admits its bytes.  All connections
+                    # share one bucket — the worker's front door.
+                    wait = self.shaper.reserve(len(body))
+                    if wait > 0.0:
+                        self.shaped_sleep_s += wait
+                        time.sleep(wait)
                 (req_id,) = struct.unpack_from("!I", body)
                 self._q.put(_Request(conn, lock, req_id,
                                      unpack_payload(body[4:])))
@@ -329,7 +410,8 @@ class WorkerServer:
 
 
 def _worker_main(manifest: dict, params, max_batch: int, conn,
-                 precompile: bool = True) -> None:
+                 precompile: bool = True,
+                 shaping: Optional[dict] = None) -> None:
     """Entry point of one spawned worker process.
 
     Rebuilds the jitted server half from the deployment manifest (jitted
@@ -354,7 +436,9 @@ def _worker_main(manifest: dict, params, max_batch: int, conn,
         for b in range(1, max_batch + 1):
             np.asarray(serve({k: np.stack([v] * b)
                               for k, v in example.items()}))
-    ws = WorkerServer(serve, max_batch=max_batch)
+    shaper = (ShapingConfig.from_dict(shaping).bucket()
+              if shaping is not None else None)
+    ws = WorkerServer(serve, max_batch=max_batch, shaper=shaper)
     conn.send(ws.start())
     conn.close()
     ws.join()
@@ -603,6 +687,7 @@ class RealFleet:
                  router: Union[str, Router] = "round_robin",
                  max_batch: int = 8, timeout_s: float = 10.0,
                  retries: int = 2, precompile: bool = True,
+                 shaping: Optional[Union[ShapingConfig, dict]] = None,
                  mp_context: str = "spawn"):
         if n_servers < 1:
             raise ValueError(f"n_servers must be >= 1: {n_servers}")
@@ -614,6 +699,9 @@ class RealFleet:
         self.timeout_s = timeout_s
         self.retries = retries
         self.precompile = precompile
+        if isinstance(shaping, dict):
+            shaping = ShapingConfig.from_dict(shaping)
+        self.shaping = shaping
         self._mp_context = mp_context
         self.processes: list = []
         self.client: Optional[FleetClient] = None
@@ -629,7 +717,9 @@ class RealFleet:
             parent_conn, child_conn = ctx.Pipe(duplex=False)
             p = ctx.Process(target=_worker_main,
                             args=(self.manifest, self.params, self.max_batch,
-                                  child_conn, self.precompile),
+                                  child_conn, self.precompile,
+                                  None if self.shaping is None
+                                  else self.shaping.to_dict()),
                             daemon=True)
             p.start()
             child_conn.close()
@@ -765,8 +855,14 @@ def run_load(client: FleetClient, payload, *, n_clients: int = 8,
     failures: list[tuple] = []
 
     def client_loop(c: int) -> None:
-        t_k = t_start + c * period / n_clients
-        while t_k < t_start + duration_s:
+        # schedule in offsets from t_start, NOT by accumulating onto the
+        # monotonic clock: adding `period` to a large clock value rounds
+        # differently depending on the host's uptime, which made the
+        # request COUNT (k*period < duration) machine-state-dependent
+        offset = c * period / n_clients
+        k = 0
+        while offset + k * period < duration_s:
+            t_k = t_start + offset + k * period
             now = time.monotonic()
             if now < t_k:
                 time.sleep(t_k - now)
@@ -775,7 +871,7 @@ def run_load(client: FleetClient, payload, *, n_clients: int = 8,
                 lats.append(time.monotonic() - t_k)
             except (FleetTimeout, FleetError, ConnectionError) as e:
                 failures.append((c, t_k - t_start, repr(e)))
-            t_k += period
+            k += 1
 
     threads = [threading.Thread(target=client_loop, args=(c,))
                for c in range(n_clients)]
@@ -790,6 +886,6 @@ def run_load(client: FleetClient, payload, *, n_clients: int = 8,
 
 
 __all__ = ["FleetClient", "FleetError", "FleetTimeout", "LoadReport",
-           "RealFleet", "WorkerServer", "pack_payload", "run_load",
-           "unpack_payload", "MSG_REQ", "MSG_RESP", "MSG_ERR",
-           "MSG_SHUTDOWN"]
+           "RealFleet", "ShapingConfig", "TokenBucket", "WorkerServer",
+           "pack_payload", "run_load", "unpack_payload", "MSG_REQ",
+           "MSG_RESP", "MSG_ERR", "MSG_SHUTDOWN"]

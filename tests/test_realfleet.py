@@ -236,3 +236,62 @@ def test_real_fleet_two_servers_bitwise_and_crash():
     finally:
         leaked = fleet.close()
     assert leaked == []
+
+
+# ------------------------------------------------------- ingress shaping
+def test_token_bucket_gcra_with_injected_clock():
+    from repro.serving.realfleet import TokenBucket
+    now = [0.0]
+    tb = TokenBucket(rate_bps=8e6, burst_bytes=10_000,  # 1 MB/s, 10 kB burst
+                     clock=lambda: now[0])
+    assert tb.reserve(10_000) == 0.0          # the burst rides free
+    assert tb.reserve(10_000) == pytest.approx(0.01)   # 10 kB at 1 MB/s
+    now[0] = 1.0                              # bucket refills while idle
+    assert tb.reserve(10_000) == 0.0
+    # sustained over-rate with a frozen clock: debt grows linearly
+    for _ in range(100):
+        wait = tb.reserve(1_000)
+    assert wait == pytest.approx(0.1)         # 110 kB since t=1, 10 kB burst
+
+
+def test_shaping_config_roundtrip_and_bucket():
+    from repro.serving.realfleet import ShapingConfig, TokenBucket
+    cfg = ShapingConfig(rate_mbps=2.0, burst_bytes=4096)
+    assert ShapingConfig.from_dict(cfg.to_dict()) == cfg
+    assert isinstance(cfg.bucket(), TokenBucket)
+    with pytest.raises(ValueError):
+        ShapingConfig(rate_mbps=0.0)
+    with pytest.raises(ValueError):
+        ShapingConfig(rate_mbps=1.0, burst_bytes=0)
+
+
+def test_worker_front_door_shapes_ingress():
+    """A shaped WorkerServer answers correctly AND measurably sleeps:
+    requests beyond the burst pay the token-bucket wait before they are
+    admitted to the batching queue."""
+    from repro.serving.realfleet import ShapingConfig
+    body = pack_payload(_payload(1, n=256))   # ~1 kB on the wire
+    # tiny burst, 1 Mb/s: every request after the first must wait
+    shaper = ShapingConfig(rate_mbps=1.0, burst_bytes=len(body)).bucket()
+    ws = WorkerServer(lambda s: s["data"] * 2.0, max_batch=4,
+                      shaper=shaper)
+    addr = ws.start()
+    fc = FleetClient([addr], timeout_s=10.0)
+    t0 = time.monotonic()
+    for _ in range(4):
+        np.testing.assert_array_equal(fc.request(_payload(1, n=256)),
+                                      _payload(2, n=256)["data"])
+    elapsed = time.monotonic() - t0
+    expected = 3 * len(body) * 8 / 1e6        # 3 post-burst waits
+    assert ws.shaped_sleep_s >= 0.5 * expected
+    assert elapsed >= 0.5 * expected
+    fc.shutdown()
+    ws.join(5.0)
+    # unshaped control: no accumulated sleep
+    ws2 = WorkerServer(lambda s: s["data"] * 2.0, max_batch=4)
+    addr2 = ws2.start()
+    fc2 = FleetClient([addr2], timeout_s=10.0)
+    fc2.request(_payload(3))
+    assert ws2.shaped_sleep_s == 0.0
+    fc2.shutdown()
+    ws2.join(5.0)
