@@ -48,8 +48,9 @@ def _write(doc: dict, artifact: str, *, backend=None) -> dict:
     return doc
 
 
-def time_frames(fn, x, *, n: int = 20) -> tuple[float, float]:
-    fn(x)                                    # compile / warm
+def time_frames(fn, x, *, n: int = 20, warm: int = 3) -> tuple[float, float]:
+    for _ in range(warm):
+        jax.block_until_ready(fn(x))         # compile / warm, blocked
     ts = []
     for _ in range(n):
         t0 = time.perf_counter()

@@ -26,8 +26,9 @@ from repro import perfstamp
 from repro.deploy import Deployment, DeploymentConfig
 
 
-def sustained(fn, x, n_frames: int) -> np.ndarray:
-    fn(x)
+def sustained(fn, x, n_frames: int, *, warmup: int = 3) -> np.ndarray:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(x))  # compile + settle before the clock
     ts = np.empty(n_frames)
     for i in range(n_frames):
         t0 = time.perf_counter()

@@ -1,0 +1,58 @@
+"""repro.analysis — the repo's bug taxonomy, machine-checked.
+
+An AST-based static-analysis engine whose rules encode the invariants
+PRs 5-8 kept re-discovering by hand: blocked warmups before clock reads,
+offsets-from-t_start scheduling, RNG reconstruction in reset(),
+shutdown-before-close sockets, reaped workers, versioned schemas,
+live registries, and static VMEM budgets.
+
+Run ``python -m repro.analysis`` from the repo root; ``--strict`` gates
+new findings against ``analysis_baseline.json`` in CI.  Rules live in a
+registry (``RULES`` / ``register_rule``) exactly like the execution
+backends, routers and link kinds they audit.
+"""
+
+from .core import (
+    Context,
+    Finding,
+    RULES,
+    Rule,
+    SourceFile,
+    Suppression,
+    analyze_source,
+    get_rule,
+    load_context,
+    register_rule,
+    rule_names,
+    run_rules,
+    _register_builtin_rules,
+)
+from .baseline import (
+    BASELINE_VERSION,
+    baseline_problems,
+    diff_against_baseline,
+    load_baseline,
+    save_baseline,
+)
+
+_register_builtin_rules()
+
+__all__ = [
+    "Context",
+    "Finding",
+    "RULES",
+    "Rule",
+    "SourceFile",
+    "Suppression",
+    "analyze_source",
+    "get_rule",
+    "load_context",
+    "register_rule",
+    "rule_names",
+    "run_rules",
+    "BASELINE_VERSION",
+    "baseline_problems",
+    "diff_against_baseline",
+    "load_baseline",
+    "save_baseline",
+]

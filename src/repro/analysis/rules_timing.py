@@ -1,0 +1,182 @@
+"""Timing-hygiene rules.
+
+The repo's latency claims all come from ``time.perf_counter()`` windows
+around jitted JAX calls.  Two bug classes kept reappearing (PRs 5-8):
+
+* reading the clock while device work is still in flight — jax dispatch
+  is async, so a window that isn't preceded by a warmup + block measures
+  dispatch (microseconds) or compile (seconds), not the kernel;
+* accumulating periods onto a raw monotonic clock value (``t += period``)
+  instead of scheduling offsets from ``t_start`` — float error compounds
+  and the schedule drifts (the PR 8 ``run_load`` flake).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .core import (
+    Context,
+    Finding,
+    Rule,
+    dotted_name,
+    function_body,
+    iter_functions,
+    register_rule,
+)
+
+_CLOCKS = {"perf_counter", "monotonic", "time"}
+_BLOCK_SUFFIXES = ("block_until_ready", "_block")
+
+
+def _is_perf_counter_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = dotted_name(node.func)
+    return name == "perf_counter" or name.endswith(".perf_counter")
+
+
+def _is_block_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = dotted_name(node.func)
+    last = name.rsplit(".", 1)[-1]
+    return last == "block_until_ready" or last.endswith("_block")
+
+
+def _check_warmup(ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in ctx.files:
+        if f.tree is None:
+            continue
+        for fn, _cls in iter_functions(f.tree):
+            body = function_body(fn)
+            pc_lines = sorted(
+                n.lineno for n in body if _is_perf_counter_call(n)
+            )
+            if len(pc_lines) < 2:
+                continue  # a single read is not a timing window
+            # the timed region must contain something to measure
+            first = pc_lines[0]
+            timed_calls = [
+                n
+                for n in body
+                if isinstance(n, ast.Call)
+                and n.lineno >= first
+                and not _is_perf_counter_call(n)
+            ]
+            if not timed_calls:
+                continue
+            block_lines = [n.lineno for n in body if _is_block_call(n)]
+            if not any(b < first for b in block_lines):
+                findings.append(
+                    Finding(
+                        "timing-warmup",
+                        f.path,
+                        first,
+                        f"perf_counter window in {getattr(fn, 'name', '?')}() "
+                        "with no preceding blocked warmup: call "
+                        "jax.block_until_ready(...) (or _block(...)) on a "
+                        "warmup result before the first clock read, or the "
+                        "window times async dispatch/compile instead of the "
+                        "work",
+                    )
+                )
+    return findings
+
+
+def _is_clock_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = dotted_name(node.func)
+    parts = name.rsplit(".", 1)
+    if len(parts) == 2:
+        return parts[0].endswith("time") and parts[1] in _CLOCKS
+    return False
+
+
+def _contains_clock_call(node: ast.AST) -> bool:
+    return any(_is_clock_call(n) for n in ast.walk(node))
+
+
+def _target_text(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except (ValueError, RecursionError):  # unparse of odd targets
+        return ""
+
+
+def _check_monotonic_accum(ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in ctx.files:
+        if f.tree is None:
+            continue
+        for fn, _cls in iter_functions(f.tree):
+            body = function_body(fn)
+            clock_vars = {}  # target text -> first assignment line
+            for n in body:
+                if isinstance(n, ast.Assign) and _contains_clock_call(n.value):
+                    for t in n.targets:
+                        text = _target_text(t)
+                        if text:
+                            clock_vars.setdefault(text, n.lineno)
+            if not clock_vars:
+                continue
+            for n in body:
+                if isinstance(n, ast.AugAssign) and isinstance(
+                    n.op, (ast.Add, ast.Sub)
+                ):
+                    text = _target_text(n.target)
+                elif (
+                    isinstance(n, ast.Assign)
+                    and len(n.targets) == 1
+                    and isinstance(n.value, ast.BinOp)
+                    and isinstance(n.value.op, (ast.Add, ast.Sub))
+                    and _target_text(n.targets[0])
+                    in (
+                        _target_text(n.value.left),
+                        _target_text(n.value.right),
+                    )
+                ):
+                    text = _target_text(n.targets[0])
+                else:
+                    continue
+                if text in clock_vars and n.lineno > clock_vars[text]:
+                    findings.append(
+                        Finding(
+                            "timing-monotonic-accum",
+                            f.path,
+                            n.lineno,
+                            f"{text!r} accumulates onto a raw monotonic "
+                            "clock value; schedule as offsets from t_start "
+                            "(t_start + i * period) so float error cannot "
+                            "compound into schedule drift",
+                        )
+                    )
+    return findings
+
+
+register_rule(
+    Rule(
+        name="timing-warmup",
+        family="timing",
+        description=(
+            "perf_counter timing windows must be preceded by a warmup that "
+            "blocks on device results (jax.block_until_ready / _block)"
+        ),
+        check=_check_warmup,
+    )
+)
+
+register_rule(
+    Rule(
+        name="timing-monotonic-accum",
+        family="timing",
+        description=(
+            "never accumulate periods onto a raw monotonic clock value; "
+            "derive deadlines as offsets from a fixed t_start"
+        ),
+        check=_check_monotonic_accum,
+    )
+)

@@ -36,6 +36,7 @@ from typing import Callable, Iterable, Optional, Sequence
 
 from repro.core.backends import backend_names, get_backend
 from repro.core.passplan import DEFAULT_VMEM_LIMIT
+from repro.schema import check_version
 
 TUNING_VERSION = 1
 
@@ -88,10 +89,9 @@ class TunedPlan:
     @classmethod
     def from_dict(cls, d: dict) -> "TunedPlan":
         d = dict(d)
-        version = d.pop("version", TUNING_VERSION)
-        if version != TUNING_VERSION:
-            raise ValueError(f"unsupported tuning version {version} "
-                             f"(this build reads {TUNING_VERSION})")
+        version = check_version("TunedPlan tuning block",
+                                d.pop("version", TUNING_VERSION),
+                                (TUNING_VERSION,))
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - known
         if unknown:

@@ -59,6 +59,7 @@ from repro.core.miniconv import (_ACTS, LayerSpec, MiniConvSpec,
                                  ShaderBudget, miniconv_apply, standard_spec)
 from repro.core.passplan import HeadPlan, PassPlan, build_pass_plan
 from repro.core.split import SplitModel
+from repro.schema import check_version
 from repro.core.tuning import TunedPlan
 from repro.core.wire import CODECS, WireCodec, get_codec
 from repro.nn.layers import dense
@@ -216,11 +217,8 @@ class DeploymentConfig:
     @classmethod
     def from_dict(cls, d: dict) -> "DeploymentConfig":
         d = dict(d)
-        version = d.pop("version", CONFIG_VERSION)
-        if version not in _READABLE_VERSIONS:
-            raise ValueError(f"unsupported manifest version {version} "
-                             f"(this build reads "
-                             f"{', '.join(map(str, _READABLE_VERSIONS))})")
+        check_version("DeploymentConfig manifest",
+                      d.pop("version", CONFIG_VERSION), _READABLE_VERSIONS)
         s = d.pop("spec")
         spec = MiniConvSpec(
             layers=tuple(LayerSpec(**l) for l in s["layers"]),

@@ -42,7 +42,7 @@ def compiled_pallas_supported() -> bool:
             interpret=False)(jnp.zeros((8, 128), jnp.float32))
         jax.block_until_ready(out)
         return True
-    except Exception:
+    except Exception:  # repro: allow(broad-except) -- compat probe: ANY failure means "compiled pallas unsupported here"
         return False
 
 

@@ -38,7 +38,8 @@ def host_fingerprint() -> str:
     try:
         import jax
         device = jax.devices()[0].device_kind.replace("/", "-")
-    except Exception:
+    except (ImportError, IndexError, RuntimeError):
+        # no jax, no devices, or backend init failed: stamp coarse-unknown
         device = "unknown"
     return "/".join([platform.system().lower(), platform.machine(),
                      device, str(os.cpu_count() or 0)])

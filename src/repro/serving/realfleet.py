@@ -50,7 +50,10 @@ from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.schema import check_version
 from repro.serving.fleet import Router, get_router
+
+SHAPING_VERSION = 1
 
 # ---------------------------------------------------------------------------
 # Framing: length-prefixed messages carrying wire-codec payloads
@@ -182,11 +185,14 @@ class ShapingConfig:
             raise ValueError(f"burst_bytes must be >= 1: {self.burst_bytes}")
 
     def to_dict(self) -> dict:
-        return {"rate_mbps": self.rate_mbps,
+        return {"version": SHAPING_VERSION,
+                "rate_mbps": self.rate_mbps,
                 "burst_bytes": self.burst_bytes}
 
     @classmethod
     def from_dict(cls, d: dict) -> "ShapingConfig":
+        check_version("ShapingConfig", d.get("version", SHAPING_VERSION),
+                      (SHAPING_VERSION,))
         return cls(rate_mbps=float(d["rate_mbps"]),
                    burst_bytes=int(d.get("burst_bytes", 16384)))
 
@@ -393,7 +399,7 @@ class WorkerServer:
                    for k in batch[0].payload}
         try:
             out = np.asarray(self.serve_batch_fn(stacked))
-        except Exception as e:  # answer rather than hang the clients
+        except Exception as e:  # repro: allow(broad-except) -- serve_batch_fn is arbitrary user code; answer MSG_ERR rather than hang the clients
             msg = f"{type(e).__name__}: {e}".encode()[:2000]
             for r in batch:
                 with contextlib.suppress(OSError):

@@ -48,6 +48,7 @@ from typing import Callable, Union
 
 import numpy as np
 
+from repro.schema import check_version
 from repro.serving import netsim, profiles
 from repro.serving.fleet import FleetQueueSim
 from repro.serving.netsim import MBPS
@@ -72,7 +73,7 @@ def _thaw(x):
     return x
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True)  # repro: allow(schema-version) -- nested in Scenario; versioned by the parent's SCENARIO_VERSION field
 class AdaptationMode:
     """One point on the codec/split-point ladder a client can pick.
 
@@ -208,10 +209,8 @@ class Scenario:
     @classmethod
     def from_dict(cls, d: dict) -> "Scenario":
         d = dict(d)
-        version = d.pop("version", SCENARIO_VERSION)
-        if version != SCENARIO_VERSION:
-            raise ValueError(f"unreadable scenario version {version!r} "
-                             f"(this build reads {SCENARIO_VERSION})")
+        check_version("Scenario", d.pop("version", SCENARIO_VERSION),
+                      (SCENARIO_VERSION,))
         link = d.pop("link")
         return cls(name=d["name"], seed=int(d.get("seed", 0)),
                    link_kind=link["kind"],

@@ -61,12 +61,14 @@ class Trainer:
         if params is None:
             params, opt_state = self.init()
         history = []
+        jax.block_until_ready(params)  # init off the clock; dispatch is async
         t0 = time.perf_counter()
         for i in range(self.tcfg.steps):
             batch = next(data)
             params, opt_state, metrics = self._step(params, opt_state,
                                                     batch)
             if i % self.tcfg.log_every == 0 or i == self.tcfg.steps - 1:
+                jax.block_until_ready(metrics)  # wall_s covers finished work
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = i
                 m["wall_s"] = time.perf_counter() - t0
