@@ -50,14 +50,19 @@ def _smoke_cfgs():
     128 steps x 8 envs x 4 epochs — compiles for minutes on CPU hosts).
     learning_starts is pulled below the 256-step smoke budget so the gate
     actually executes interleaved SAC/DDPG gradient updates, not just
-    random-action warmup (batch 32 keeps those updates cheap)."""
+    random-action warmup (batch 32 keeps those updates cheap).
+
+    DDPG runs ONE env: pendulum episodes are a fixed 200 steps, so at
+    n_envs=4 a 256-step budget is 64 steps per env and every episode is
+    truncated (the episodes_completed=0 cell this gate now rejects); one
+    env completes a full episode inside the budget."""
     from repro.rl.ddpg import DDPGConfig
     from repro.rl.ppo import PPOConfig
     from repro.rl.sac import SACConfig
     return {"ppo": PPOConfig(n_envs=4, n_steps=32, n_epochs=2,
                              n_minibatches=4),
             "sac": SACConfig(n_envs=4, learning_starts=192, batch_size=32),
-            "ddpg": DDPGConfig(n_envs=4, learning_starts=192,
+            "ddpg": DDPGConfig(n_envs=1, learning_starts=192,
                                batch_size=32)}
 
 
@@ -71,11 +76,14 @@ def run(*, total_steps: int = 512, tasks=TASKS, encoders=ENCODERS,
                         verbose=verbose, cfg=cfg)
             rows.append(res)
             s = res.summary()
+            steady = s["steady_steps_per_sec"]
             print(f"  {task:<10} {res.algo:<5} {enc:<11} "
                   f"best={res.best:8.1f} final={res.final:8.1f} "
                   f"mean={res.mean:8.1f} episodes={s['episodes']} "
                   f"({s['episodes_truncated']} truncated) "
-                  f"steps/s={res.steps_per_sec:7.1f}")
+                  f"steps/s={res.steps_per_sec:7.1f} "
+                  f"compile_s={res.compile_s:6.1f} "
+                  f"steady/s={steady if steady is None else round(steady, 1)}")
     return rows
 
 
@@ -243,13 +251,23 @@ def write_bench(rows, *, total_steps: int, compare_row=None,
 
 
 def check_smoke(doc: dict) -> None:
-    """CI gate: every condition finite with nonzero throughput."""
+    """CI gate: every condition finite with nonzero throughput, and at
+    least one COMPLETED episode per condition — Best/Mean/Final must be
+    real episodic statistics, not truncated-partial fallbacks."""
     for c in doc["conditions"]:
         name = f"{c['task']}/{c['encoder']}"
         for k in ("best", "final", "mean"):
             assert np.isfinite(c[k]), f"{name}: non-finite {k}={c[k]}"
         assert c["episodes"] >= 1, f"{name}: no episodes recorded"
+        assert c["episodes_completed"] >= 1, \
+            f"{name}: 0 completed episodes — stats fall back to " \
+            "truncated partials (bound episode length or raise the budget)"
         assert c["steps_per_sec"] > 0, f"{name}: zero throughput"
+        assert np.isfinite(c["compile_s"]) and c["compile_s"] >= 0, \
+            f"{name}: bad compile_s={c['compile_s']}"
+        steady = c["steady_steps_per_sec"]
+        assert steady is None or steady > 0, \
+            f"{name}: bad steady_steps_per_sec={steady}"
     thr = doc.get("offpolicy_throughput")
     if thr is not None:
         assert thr["engine_steps_per_sec"] > 0 \

@@ -503,6 +503,20 @@ class Deployment:
         """The paper's Figure-5 pipeline, ready to measure."""
         return self.client(params), self.server(params, head)
 
+    def export_best(self, population, head: Optional[Callable] = None
+                    ) -> tuple[EdgeClient, BatchingPolicyServer]:
+        """Serving pair for a population run's winning member.
+
+        ``population`` is a :class:`repro.rl.population.PopulationResult`;
+        the winner is its ``best_member()`` — highest ``final_100_mean``
+        under the deterministic eval protocol.  The member's trained
+        params serve through THIS manifest exactly like the single-run
+        path (:meth:`serving_pair` accepts ``TrainState.params``
+        directly), so train-many / freeze-best / serve-on-fleet is one
+        manifest round-trip.
+        """
+        return self.serving_pair(population.best_params(), head=head)
+
     def fleet_sim(self, service_model: Callable[[int], float], *, uplink,
                   rate_hz: float = 10.0, horizon_s: float = 5.0,
                   action_bytes: int = 64,

@@ -91,6 +91,21 @@ class PixelEnv:
         (states, (N, A)) -> (states, (N, H, W, C) obs, (N,) r, (N,) done)."""
         return jax.vmap(self.step)(states, actions)
 
+    # -- population-batched API ---------------------------------------------
+    def reset_population(self, keys):
+        """Population-batched reset: ``(P, N, 2)`` keys -> stacked states +
+        ``(P, N, H, W, C)`` obs.  Row ``p`` is bitwise what
+        ``reset_batch(keys[p])`` returns — population members are
+        independent lanes, never coupled (``repro.rl.population`` relies
+        on this for its member-0 parity guarantee)."""
+        return jax.vmap(self.reset_batch)(keys)
+
+    def step_population(self, states, actions):
+        """Population-batched step over ``(member, env)`` axes:
+        (states, (P, N, A)) -> (states, (P, N, H, W, C) obs, (P, N) r,
+        (P, N) done)."""
+        return jax.vmap(self.step_batch)(states, actions)
+
     # -- deployment boundary -------------------------------------------------
     @staticmethod
     def to_rgba_uint8(obs):

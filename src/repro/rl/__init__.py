@@ -37,11 +37,18 @@ Module map
 ``train``
     The generic driver: ``TASK_ALGO`` pairings, episode tracking with
     explicit end-of-training truncation counting, and
-    :class:`TrainResult` (best/mean/final, throughput, trained params).
+    :class:`TrainResult` (best/mean/final, throughput with the
+    compile/steady split, trained params).
+``population``
+    P = seeds × hyperparameter variants × tasks trained as ONE jitted
+    program per static shape (vmapped TrainState / env / replay / PRNG
+    axes, tracer hyperparameters), plus the paper's deterministic
+    final-100-episode eval protocol (``evaluate`` / ``final_100_mean``)
+    and ``best_member()`` selection feeding ``Deployment.export_best``.
 """
 
 from repro.rl.agent import Agent, TrainState, make_agent
-from repro.rl.train import TASK_ALGO, TrainResult, train
+from repro.rl.train import TASK_ALGO, TrainResult, train, train_population
 
-__all__ = ["train", "TrainResult", "TASK_ALGO", "Agent", "TrainState",
-           "make_agent"]
+__all__ = ["train", "train_population", "TrainResult", "TASK_ALGO",
+           "Agent", "TrainState", "make_agent"]

@@ -10,6 +10,7 @@ Exposed as a frozen :class:`~repro.rl.agent.Agent` bundle
 from __future__ import annotations
 
 import dataclasses
+from typing import ClassVar, FrozenSet
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,12 @@ class DDPGConfig:
     # would truncate every episode; 2 envs completes one per env while
     # still exercising the vectorised path (raise freely at paper scale).
     n_envs: int = 2
+
+    # Fields that only feed traced arithmetic (never array shapes, scan
+    # lengths or buffer sizes), so repro.rl.population may stack them
+    # across population members and vmap over them.
+    VMAPPABLE: ClassVar[FrozenSet[str]] = frozenset(
+        {"gamma", "tau", "lr", "action_noise"})
 
 
 def init_ddpg(key, encoder: Encoder, action_dim: int):

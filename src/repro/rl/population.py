@@ -1,0 +1,570 @@
+"""Population training: seeds × hyperparameter variants × tasks as ONE
+jitted program, plus the paper's final-100-episode eval protocol.
+
+The single-run engines in ``repro.rl.rollout`` already fuse rollout,
+replay and learning into one XLA program — but they train one agent at a
+time, so P candidate runs pay P compiles and P program launches (minutes
+of XLA compile each on CPU hosts, per ``BENCH_learning.json``).  This
+module vmaps the SAME pure loop bodies over a leading member axis:
+
+* the agent ``TrainState`` pytree, the vectorised env states, each
+  member's :class:`~repro.rl.buffers.DeviceReplayBuffer` ring and each
+  member's PRNG stream all gain a ``(P, ...)`` axis;
+* hyperparameters that only feed traced arithmetic (each config's
+  ``VMAPPABLE`` set) are stacked into ``(P,)`` arrays and rebuilt into a
+  per-member config *inside* the trace, so one program trains P distinct
+  hyperparameter settings;
+* members whose configs differ in a *static* field (shapes, scan lengths,
+  buffer sizes) cannot share a program — :meth:`PopulationSpec.programs`
+  groups members so each group is jointly jittable, and tasks always get
+  their own program (different envs/action spaces).
+
+Two lane modes map the member axis (``lane_mode``):
+
+* ``"exact"`` (default) — ``lax.map``, i.e. a ``lax.scan`` over the
+  stacked member pytrees.  Each lane executes the IDENTICAL unbatched
+  ops as the single-run engine, so member 0 of a population is
+  bitwise-equal to ``train()`` at the same seed (the driver mirrors its
+  PRNG chain per member) — ``benchmarks/population.py --smoke`` gates on
+  exactly that.  Lanes run back-to-back on device, and the dominant
+  single-run cost on CPU hosts — XLA compile — is paid once for P
+  members.
+* ``"vmap"`` — batched lanes for accelerator throughput.  Forward math
+  is lane-exact, but XLA lowers *batched* gradient matmuls (and the
+  batched QR in orthogonal init) differently from their unbatched
+  forms, so lanes drift from single runs at the float32-ulp level
+  (~1e-7 per update on this host); use it when wall-clock beats bitwise
+  reproducibility.
+
+Evaluation follows the paper's protocol ("mean over the final 100
+episodes"): :func:`make_evaluator` builds a deterministic eval-mode
+rollout — ``Agent.policy_head`` (no exploration noise) through
+``reset_batch``/``step_batch`` on a ``train=False`` env (centre crop) —
+returning per-episode returns that replay bitwise at a fixed seed.
+:func:`evaluate_population` scores every member on the SAME episode seeds
+so :meth:`PopulationResult.best_member` is an apples-to-apples pick, and
+``Deployment.export_best`` serves the winner's params straight from a
+manifest like the single-run path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.envs import make_pixel_env
+from repro.envs.wrappers import PixelEnv
+from repro.rl.agent import Agent, _algorithms, make_agent
+from repro.rl.rollout import (Engine, offpolicy_capacity, offpolicy_chunk_fn,
+                              offpolicy_init_fn, offpolicy_plan,
+                              onpolicy_init_fn, onpolicy_iter_fn,
+                              onpolicy_plan)
+from repro.rl.train import (TASK_ALGO, _flush_truncated, _pipeline_encoder,
+                            _track_episodes)
+from repro.schema import check_version
+
+SPEC_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Spec: which members exist, and which programs they compile into
+# ---------------------------------------------------------------------------
+
+def _canon_pairs(overrides) -> tuple:
+    """Canonicalise a ``{field: value}`` mapping (dict or key/value pairs)
+    into a sorted tuple of pairs, so two specs naming the same overrides in
+    a different order are equal (and hashable inside the frozen spec)."""
+    items = overrides.items() if isinstance(overrides, dict) \
+        else (tuple(p) for p in overrides)
+    return tuple(sorted((str(k), v) for k, v in items))
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationSpec:
+    """P = tasks × variants × seeds members of one encoder family.
+
+    ``variants`` is a sequence of per-member config overrides (dicts or
+    key/value pairs); ``cfg_overrides`` applies to every member first.
+    Overrides of a config's ``VMAPPABLE`` fields stack into one program;
+    any other (static) override splits the program.  Member order is
+    task-major, then variant, then seed — :meth:`members` is the single
+    source of truth.
+    """
+
+    tasks: tuple
+    seeds: tuple
+    variants: tuple = ((),)
+    encoder: str = "miniconv4"
+    total_steps: int = 512
+    cfg_overrides: tuple = ()
+
+    def __post_init__(self):
+        tasks = (self.tasks,) if isinstance(self.tasks, str) else self.tasks
+        object.__setattr__(self, "tasks", tuple(tasks))
+        object.__setattr__(self, "seeds",
+                           tuple(int(s) for s in self.seeds))
+        variants = tuple(_canon_pairs(v) for v in self.variants) or ((),)
+        object.__setattr__(self, "variants", variants)
+        object.__setattr__(self, "cfg_overrides",
+                           _canon_pairs(self.cfg_overrides))
+        if not self.tasks:
+            raise ValueError("PopulationSpec needs at least one task")
+        if not self.seeds:
+            raise ValueError("PopulationSpec needs at least one seed")
+        for task in self.tasks:
+            if task not in TASK_ALGO:
+                raise ValueError(f"unknown task {task!r}; one of: "
+                                 f"{', '.join(TASK_ALGO)}")
+
+    @property
+    def n_members(self) -> int:
+        return len(self.tasks) * len(self.variants) * len(self.seeds)
+
+    def members(self) -> list["Member"]:
+        out: list[Member] = []
+        for task in self.tasks:
+            for vi, variant in enumerate(self.variants):
+                for seed in self.seeds:
+                    out.append(Member(index=len(out), task=task,
+                                      algo=TASK_ALGO[task], seed=seed,
+                                      variant_index=vi,
+                                      overrides=dict(variant)))
+        return out
+
+    def programs(self) -> list["Program"]:
+        """Members grouped into jointly-jittable programs.
+
+        Each group shares (task, static config); vmappable overrides
+        become per-member hyperparameter columns, missing entries filled
+        from the group's static config so every column is stackable.
+        """
+        algos = _algorithms()
+        groups: dict = {}
+        order: list = []
+        for m in self.members():
+            config_cls = algos[m.algo][0]
+            field_names = {f.name for f in dataclasses.fields(config_cls)}
+            vmappable = getattr(config_cls, "VMAPPABLE", frozenset())
+            for k in list(dict(self.cfg_overrides)) + list(m.overrides):
+                if k not in field_names:
+                    raise ValueError(
+                        f"{config_cls.__name__} has no field {k!r} "
+                        f"(member {m.index}, task {m.task!r})")
+            base = config_cls(**dict(self.cfg_overrides))
+            static = {k: v for k, v in m.overrides.items()
+                      if k not in vmappable}
+            hyper = {k: v for k, v in m.overrides.items() if k in vmappable}
+            static_cfg = dataclasses.replace(base, **static)
+            gkey = (m.task, static_cfg)
+            if gkey not in groups:
+                groups[gkey] = Program(task=m.task, algo=m.algo,
+                                       static_cfg=static_cfg, members=[],
+                                       hyper_fields=())
+                order.append(gkey)
+            prog = groups[gkey]
+            prog.members.append(m)
+            prog.hyper_fields = tuple(sorted(set(prog.hyper_fields)
+                                             | set(hyper)))
+        return [groups[k] for k in order]
+
+    def to_dict(self) -> dict:
+        return {"version": SPEC_VERSION,
+                "tasks": list(self.tasks),
+                "seeds": list(self.seeds),
+                "variants": [[list(p) for p in v] for v in self.variants],
+                "encoder": self.encoder,
+                "total_steps": self.total_steps,
+                "cfg_overrides": [list(p) for p in self.cfg_overrides]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PopulationSpec":
+        d = dict(d)
+        check_version("PopulationSpec", d.pop("version", None),
+                      (SPEC_VERSION,))
+        return cls(tasks=tuple(d["tasks"]), seeds=tuple(d["seeds"]),
+                   variants=tuple(tuple(tuple(p) for p in v)
+                                  for v in d.get("variants", [[]])),
+                   encoder=d.get("encoder", "miniconv4"),
+                   total_steps=int(d.get("total_steps", 512)),
+                   cfg_overrides=tuple(tuple(p) for p in
+                                       d.get("cfg_overrides", [])))
+
+
+@dataclasses.dataclass
+class Member:
+    """One population member: identity, then results once trained."""
+
+    index: int
+    task: str
+    algo: str
+    seed: int
+    variant_index: int
+    overrides: dict
+
+    episode_returns: list = dataclasses.field(default_factory=list)
+    truncated_returns: list = dataclasses.field(default_factory=list)
+    env_steps: int = 0
+    params: Any = None           # trained TrainState.params pytree
+    eval_returns: Optional[np.ndarray] = None   # protocol eval episodes
+
+    @property
+    def final_100_mean(self) -> float:
+        """Mean return over the final 100 eval episodes (paper metric);
+        falls back to training episodes when the member wasn't evaluated."""
+        if self.eval_returns is not None:
+            return final_100_mean(self.eval_returns)
+        return final_100_mean(self.episode_returns
+                              or self.truncated_returns)
+
+    def summary(self) -> dict:
+        return {"member": self.index, "task": self.task, "algo": self.algo,
+                "seed": self.seed, "variant": self.variant_index,
+                "overrides": dict(self.overrides),
+                "episodes_completed": len(self.episode_returns),
+                "env_steps": self.env_steps,
+                "final_100_mean": self.final_100_mean}
+
+
+@dataclasses.dataclass
+class Program:
+    """A jointly-jittable group of members (shared task + static config)."""
+
+    task: str
+    algo: str
+    static_cfg: Any
+    members: list
+    hyper_fields: tuple
+
+    def hyper_arrays(self) -> dict:
+        """``{field: (P,) float32}`` columns, member order, gaps filled
+        from the static config so heterogeneous variants still stack."""
+        return {k: jnp.asarray(
+                    [m.overrides.get(k, getattr(self.static_cfg, k))
+                     for m in self.members], jnp.float32)
+                for k in self.hyper_fields}
+
+
+def final_100_mean(returns) -> float:
+    """The paper's summary statistic: mean over the last 100 episodes."""
+    r = np.asarray(list(returns), dtype=np.float64).ravel()
+    return float(np.mean(r[-100:])) if r.size else float("nan")
+
+
+def split_member_keys(keys):
+    """Per-member ``jax.random.split``: ``(P, 2)`` keys -> two ``(P, 2)``
+    key arrays, row p being exactly ``jax.random.split(keys[p])`` — the
+    population mirror of the single-run driver's ``a, b = split(key)``."""
+    pair = jax.vmap(jax.random.split)(keys)
+    return pair[:, 0], pair[:, 1]
+
+
+# ---------------------------------------------------------------------------
+# The population engine: jit(vmap(pure single-run bodies))
+# ---------------------------------------------------------------------------
+
+LANE_MODES = ("exact", "vmap")
+
+
+def make_population_engine(env: PixelEnv, algo: str, encoder, action_dim: int,
+                           static_cfg: Any, hyper: dict, n_members: int,
+                           total_steps: int,
+                           lane_mode: str = "exact") -> Engine:
+    """An :class:`~repro.rl.rollout.Engine` whose carry/keys carry a
+    leading ``(P,)`` member axis.  ``hyper`` maps VMAPPABLE config fields
+    to ``(P,)`` arrays; the per-member config is rebuilt *inside* the
+    trace (``dataclasses.replace`` with tracer leaves), so the agent
+    factories close over traced hyperparameters with no protocol change.
+
+    ``lane_mode="exact"`` maps members with ``lax.map`` (bitwise-equal
+    lanes, the default); ``"vmap"`` batches them (accelerator mode, see
+    module docstring).  ``init`` runs the single-run init eagerly per
+    member and stacks — init is once-per-run, and the eager path keeps
+    even the orthogonal-init QR bitwise-identical to ``train()``.
+    """
+    if lane_mode not in LANE_MODES:
+        raise ValueError(f"lane_mode {lane_mode!r}; one of: "
+                         f"{', '.join(LANE_MODES)}")
+    base_agent = make_agent(algo, encoder, action_dim, cfg=static_cfg)
+
+    def member_agent(hyper_m: dict) -> Agent:
+        if not hyper_m:
+            return base_agent
+        return make_agent(algo, encoder, action_dim,
+                          cfg=dataclasses.replace(static_cfg, **hyper_m))
+
+    def lane_map(fn: Callable) -> Callable:
+        """Lift ``fn(carry, key, hyper_m)`` over the member axis."""
+        if lane_mode == "vmap":
+            return lambda carry, keys: jax.vmap(fn)(carry, keys, hyper)
+        return lambda carry, keys: jax.lax.map(
+            lambda xs: fn(*xs), (carry, keys, hyper))
+
+    if base_agent.on_policy:
+        single_init = lambda agent: onpolicy_init_fn(env, agent)
+
+        def iter_m(carry, key, hyper_m):
+            return onpolicy_iter_fn(env, member_agent(hyper_m))(carry, key)
+
+        run_iter = jax.jit(lane_map(iter_m), donate_argnums=(0,))
+
+        def plan():
+            return onpolicy_plan(static_cfg, total_steps)
+
+        def run(carry, keys, phase):
+            return run_iter(carry, keys)
+    else:
+        cap = offpolicy_capacity(static_cfg, total_steps)
+        single_init = lambda agent: offpolicy_init_fn(env, agent, cap)
+
+        def chunk_m(carry, key, hyper_m, *, n_steps, warmup):
+            return offpolicy_chunk_fn(env, member_agent(hyper_m))(
+                carry, key, n_steps=n_steps, warmup=warmup)
+
+        def pop_chunk(carry, keys, *, n_steps, warmup):
+            body = lambda c, k, h: chunk_m(c, k, h, n_steps=n_steps,
+                                           warmup=warmup)
+            return lane_map(body)(carry, keys)
+
+        run_chunk = jax.jit(pop_chunk,
+                            static_argnames=("n_steps", "warmup"),
+                            donate_argnums=(0,))
+
+        def plan():
+            return offpolicy_plan(static_cfg, total_steps)
+
+        def run(carry, keys, phase):
+            kind, n_steps = phase
+            return run_chunk(carry, keys, n_steps=n_steps,
+                             warmup=(kind == "warmup"))
+
+    def init(keys):
+        hyper_host = {k: np.asarray(v) for k, v in hyper.items()}
+        carries = []
+        for p in range(n_members):
+            hyper_m = {k: float(v[p]) for k, v in hyper_host.items()}
+            carries.append(single_init(member_agent(hyper_m))(keys[p]))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
+
+    return Engine(agent=base_agent, n_envs=static_cfg.n_envs, init=init,
+                  plan=plan, run=run)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic eval: the paper's final-100-episode protocol
+# ---------------------------------------------------------------------------
+
+def _episode_returns_fn(env: PixelEnv, agent: Agent, n_episodes: int,
+                        max_steps: Optional[int]) -> Callable:
+    """Pure ``(params, key) -> (n_episodes,) returns``: E parallel
+    episodes under the deterministic serving policy, no exploration."""
+    E = int(n_episodes)
+    T = int(max_steps if max_steps is not None else env.env.max_steps)
+
+    def episode_returns(params, key):
+        env_states, obs = env.reset_batch(jax.random.split(key, E))
+        head = agent.policy_head(params)
+
+        def step(carry, _):
+            env_states, obs, ret, alive = carry
+            feats = agent.encoder.apply(params["encoder"], obs)
+            action = jnp.clip(head(feats), -1.0, 1.0)
+            env_states, obs, reward, done = env.step_batch(env_states,
+                                                           action)
+            # sum rewards only until each episode's first done: the
+            # auto-reset wrapper keeps stepping, the protocol does not
+            ret = ret + reward * alive
+            alive = alive * (1.0 - done.astype(jnp.float32))
+            return (env_states, obs, ret, alive), None
+
+        (_, _, ret, _), _ = jax.lax.scan(
+            step, (env_states, obs, jnp.zeros(E), jnp.ones(E)), None,
+            length=T)
+        return ret
+
+    return episode_returns
+
+
+def make_evaluator(env: PixelEnv, agent: Agent, n_episodes: int = 100, *,
+                   max_steps: Optional[int] = None) -> Callable:
+    """Jitted ``(params, key) -> (n_episodes,) returns`` — deterministic:
+    the same (params, key) replays bitwise."""
+    return jax.jit(_episode_returns_fn(env, agent, n_episodes, max_steps))
+
+
+def make_population_evaluator(env: PixelEnv, agent: Agent,
+                              n_episodes: int = 100, *,
+                              max_steps: Optional[int] = None,
+                              lane_mode: str = "exact") -> Callable:
+    """Jitted ``(stacked params, key) -> (P, n_episodes) returns``.
+
+    One shared ``key``: every member is scored on the SAME episode seeds,
+    so member comparisons are paired, and permuting members permutes the
+    rows bitwise (lanes never interact).  In ``"exact"`` lane mode each
+    row is additionally bitwise what :func:`make_evaluator` returns for
+    that member alone.
+    """
+    if lane_mode not in LANE_MODES:
+        raise ValueError(f"lane_mode {lane_mode!r}; one of: "
+                         f"{', '.join(LANE_MODES)}")
+    fn = _episode_returns_fn(env, agent, n_episodes, max_steps)
+    if lane_mode == "vmap":
+        return jax.jit(jax.vmap(fn, in_axes=(0, None)))
+    return jax.jit(lambda params, key: jax.lax.map(
+        lambda p: fn(p, key), params))
+
+
+def evaluate(agent: Agent, params, n_episodes: int = 100, *,
+             env: Optional[PixelEnv] = None, task: Optional[str] = None,
+             seed: int = 0, max_steps: Optional[int] = None) -> np.ndarray:
+    """The paper's eval protocol in one call: ``n_episodes`` deterministic
+    episodes (default 100 — "mean over the final 100 episodes") of
+    ``agent.policy_head`` on a ``train=False`` (centre-crop) env.
+    Returns the per-episode returns; reduce with :func:`final_100_mean`.
+    Deterministic in ``seed``: repeated calls are bitwise identical.
+    """
+    if env is None:
+        if task is None:
+            raise ValueError("evaluate() needs env= or task=")
+        env = make_pixel_env(task, train=False)
+    fn = make_evaluator(env, agent, n_episodes, max_steps=max_steps)
+    return np.asarray(fn(params, jax.random.PRNGKey(seed)))
+
+
+# ---------------------------------------------------------------------------
+# Driver: train every program, eval every member, pick the winner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PopulationResult:
+    spec: PopulationSpec
+    members: list
+    program_stats: list
+    wall_time_s: float
+
+    @property
+    def aggregate_steps_per_sec(self) -> float:
+        total = sum(m.env_steps for m in self.members)
+        return total / self.wall_time_s if self.wall_time_s > 0 \
+            else float("nan")
+
+    def best_member(self) -> Member:
+        """Winner under the paper's metric (``final_100_mean``); ties and
+        all-NaN populations fall back to the lowest member index."""
+        scored = [m for m in self.members
+                  if np.isfinite(m.final_100_mean)]
+        if not scored:
+            return self.members[0]
+        return max(scored, key=lambda m: m.final_100_mean)
+
+    def best_params(self):
+        return self.best_member().params
+
+    def summary(self) -> dict:
+        best = self.best_member()
+        return {"n_members": len(self.members),
+                "n_programs": len(self.program_stats),
+                "wall_time_s": self.wall_time_s,
+                "aggregate_steps_per_sec": self.aggregate_steps_per_sec,
+                "best_member": best.index,
+                "best_final_100_mean": best.final_100_mean,
+                "members": [m.summary() for m in self.members],
+                "programs": list(self.program_stats)}
+
+
+def train_population(spec: PopulationSpec, *, eval_episodes: int = 100,
+                     eval_seed: int = 0,
+                     eval_max_steps: Optional[int] = None,
+                     deploy_config=None, lane_mode: str = "exact",
+                     verbose: bool = False) -> PopulationResult:
+    """Train every member of ``spec`` — one jitted program per
+    (task, static-config) group — then score each with the deterministic
+    eval protocol (``eval_episodes=0`` skips eval; ``eval_max_steps``
+    shortens the episode window for smoke-scale runs).
+
+    Per member, the PRNG chain is exactly ``train()``'s: seed ->
+    ``k_init, key = split`` -> per-phase ``key, sub = split``.  With the
+    default ``lane_mode="exact"`` every member therefore reproduces a
+    single ``train()`` run at its seed bitwise.  Member results land on
+    the returned :class:`PopulationResult.members` in spec order.
+    """
+    t_start = time.time()
+    stats: list = []
+    all_members: list = []
+    for prog in spec.programs():
+        env = make_pixel_env(prog.task, train=True)
+        encoder = _pipeline_encoder(spec.encoder, env.obs_shape[-1],
+                                    deploy_config=deploy_config)
+        P = len(prog.members)
+        engine = make_population_engine(
+            env, prog.algo, encoder, env.action_dim, prog.static_cfg,
+            prog.hyper_arrays(), P, spec.total_steps, lane_mode=lane_mode)
+
+        keys = jnp.stack([jax.random.PRNGKey(m.seed) for m in prog.members])
+        k_init, keys = split_member_keys(keys)
+        t0 = time.time()
+        carry = engine.init(k_init)
+
+        N = engine.n_envs
+        returns: list[list[float]] = [[] for _ in range(P)]
+        ep_ret = np.zeros((P, N))
+        ep_len = np.zeros((P, N), np.int64)
+        env_steps = 0
+        compile_s = 0.0
+        seen: set = set()
+        for it, phase in enumerate(engine.plan()):
+            keys, subs = split_member_keys(keys)
+            t_call = time.time()
+            carry, rewards, dones, metrics = engine.run(carry, subs, phase)
+            rewards = np.asarray(rewards)       # (P, T, N); blocks
+            dones = np.asarray(dones)
+            if phase not in seen:
+                seen.add(phase)
+                compile_s += time.time() - t_call
+            for p in range(P):
+                ep_ret[p], ep_len[p] = _track_episodes(
+                    returns[p], ep_ret[p], ep_len[p], rewards[p], dones[p])
+            env_steps += int(rewards[0].size)
+            if verbose:
+                print(f"  [population {prog.task}/{prog.algo} P={P}] "
+                      f"{phase[0]} {it} episodes="
+                      f"{sum(len(r) for r in returns)}")
+
+        state = carry.state
+        for p, m in enumerate(prog.members):
+            m.episode_returns = returns[p]
+            m.truncated_returns = _flush_truncated(ep_ret[p], ep_len[p])
+            m.env_steps = env_steps
+            m.params = jax.tree.map(lambda x: x[p], state.params)
+
+        if eval_episodes:
+            eval_env = make_pixel_env(prog.task, train=False)
+            eval_agent = make_agent(prog.algo, encoder, env.action_dim,
+                                    cfg=prog.static_cfg)
+            evaluator = make_population_evaluator(
+                eval_env, eval_agent, eval_episodes,
+                max_steps=eval_max_steps, lane_mode=lane_mode)
+            rets = np.asarray(evaluator(state.params,
+                                        jax.random.PRNGKey(eval_seed)))
+            for p, m in enumerate(prog.members):
+                m.eval_returns = rets[p]
+
+        stats.append({"task": prog.task, "algo": prog.algo, "n_members": P,
+                      "hyper_fields": list(prog.hyper_fields),
+                      "env_steps_per_member": env_steps,
+                      "wall_s": time.time() - t0, "compile_s": compile_s})
+        all_members.extend(prog.members)
+
+    all_members.sort(key=lambda m: m.index)
+    return PopulationResult(spec=spec, members=all_members,
+                            program_stats=stats,
+                            wall_time_s=time.time() - t_start)
+
+
+__all__ = ["SPEC_VERSION", "LANE_MODES", "PopulationSpec", "Member",
+           "Program", "PopulationResult", "final_100_mean",
+           "split_member_keys", "make_population_engine", "make_evaluator",
+           "make_population_evaluator", "evaluate", "train_population"]

@@ -15,6 +15,7 @@ GAE + the epoch/minibatch scan on device.
 from __future__ import annotations
 
 import dataclasses
+from typing import ClassVar, FrozenSet
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,13 @@ class PPOConfig:
     lr: float = 3e-4
     max_grad_norm: float = 0.5
     quantize_wire: bool = False  # straight-through uint8 wire in training
+
+    # Fields that only feed traced arithmetic (never array shapes, scan
+    # lengths or buffer sizes), so repro.rl.population may stack them
+    # across population members and vmap over them.
+    VMAPPABLE: ClassVar[FrozenSet[str]] = frozenset(
+        {"gamma", "gae_lambda", "clip_eps", "vf_coef", "ent_coef", "lr",
+         "max_grad_norm"})
 
 
 def init_ppo(key, encoder: Encoder, action_dim: int):

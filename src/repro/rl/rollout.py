@@ -31,11 +31,17 @@ Engines expose a uniform driver protocol::
 fixed-shape chunks so at most three XLA programs are compiled per run
 (warmup, full chunk, tail chunk); the budget is baked in at build time
 because the off-policy ring buffer is sized from it.
+
+The loop *bodies* are exposed as pure builders (``offpolicy_chunk_fn``,
+``offpolicy_init_fn``, ``onpolicy_iter_fn``, ...) separate from the
+``make_*_engine`` wrappers that jit them.  ``repro.rl.population`` vmaps
+the same pure functions over a member axis, so a population member and a
+single-run engine execute literally the same traced program body — the
+basis of the member-0 bitwise-parity guarantee.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -87,10 +93,9 @@ def make_engine(env: PixelEnv, agent: Agent, total_steps: int) -> Engine:
 # On-policy: scan-rollout + whole-trajectory update per jitted call
 # ---------------------------------------------------------------------------
 
-def make_onpolicy_engine(env: PixelEnv, agent: Agent,
-                         total_steps: int) -> Engine:
-    cfg = agent.cfg
-    N, T = cfg.n_envs, cfg.n_steps
+def onpolicy_init_fn(env: PixelEnv, agent: Agent) -> Callable:
+    """Pure ``(key) -> OnPolicyCarry`` — agent params + N reset envs."""
+    N = agent.cfg.n_envs
 
     def init(key) -> OnPolicyCarry:
         k_agent, k_env = jax.random.split(key)
@@ -98,7 +103,14 @@ def make_onpolicy_engine(env: PixelEnv, agent: Agent,
         env_states, obs = env.reset_batch(jax.random.split(k_env, N))
         return OnPolicyCarry(state, env_states, obs)
 
-    @functools.partial(jax.jit, donate_argnums=(0,))
+    return init
+
+
+def onpolicy_iter_fn(env: PixelEnv, agent: Agent) -> Callable:
+    """Pure ``(carry, key) -> (carry, rewards, dones, metrics)`` body of
+    one on-policy iteration (rollout scan + whole-trajectory update)."""
+    T = agent.cfg.n_steps
+
     def run_iter(carry: OnPolicyCarry, key):
         state, env_states, obs = carry
         k_roll, k_upd = jax.random.split(key)
@@ -120,32 +132,66 @@ def make_onpolicy_engine(env: PixelEnv, agent: Agent,
         return (OnPolicyCarry(state, env_states, obs),
                 traj["reward"], traj["done"], metrics)
 
+    return run_iter
+
+
+def onpolicy_plan(cfg, total_steps: int) -> list[tuple[str, int]]:
+    return [("iter", cfg.n_steps)] * max(
+        total_steps // (cfg.n_steps * cfg.n_envs), 1)
+
+
+def make_onpolicy_engine(env: PixelEnv, agent: Agent,
+                         total_steps: int) -> Engine:
+    cfg = agent.cfg
+    init = onpolicy_init_fn(env, agent)
+    run_iter = jax.jit(onpolicy_iter_fn(env, agent), donate_argnums=(0,))
+
     def plan():
-        return [("iter", T)] * max(total_steps // (T * N), 1)
+        return onpolicy_plan(cfg, total_steps)
 
     def run(carry, key, phase):
         return run_iter(carry, key)
 
-    return Engine(agent=agent, n_envs=N, init=init, plan=plan, run=run)
+    return Engine(agent=agent, n_envs=cfg.n_envs, init=init, plan=plan,
+                  run=run)
 
 
 # ---------------------------------------------------------------------------
 # Off-policy: device ring buffer + interleaved updates inside one scan
 # ---------------------------------------------------------------------------
 
-def make_offpolicy_engine(env: PixelEnv, agent: Agent,
-                          total_steps: int) -> Engine:
-    cfg = agent.cfg
+def offpolicy_capacity(cfg, total_steps: int) -> int:
+    """Ring capacity for a run: sized to the budget (never more than
+    ``cfg.buffer_size``), rounded up to the fixed ``n_envs`` insert width
+    the ring requires."""
     N = cfg.n_envs
-    n_updates = cfg.train_freq * N   # keep the seed loop's 1 update/env-step
-    # Random warmup must bank at least one minibatch before updates start.
-    warmup_vec = -(-max(cfg.learning_starts, cfg.batch_size) // N)
     total_vec = -(-total_steps // N)
-    # Ring sized to the run (never more than cfg.buffer_size), rounded up
-    # to the fixed n_envs insert width the ring requires.
     cap = min(cfg.buffer_size, total_vec * N)
     cap = max(cap, cfg.batch_size, N)
-    cap = -(-cap // N) * N
+    return -(-cap // N) * N
+
+
+def offpolicy_plan(cfg, total_steps: int) -> list[tuple[str, int]]:
+    """Warmup + fixed-shape train chunks covering ``total_steps``.
+
+    Random warmup must bank at least one minibatch before updates start.
+    """
+    N = cfg.n_envs
+    warmup_vec = -(-max(cfg.learning_starts, cfg.batch_size) // N)
+    total_vec = -(-total_steps // N)
+    warm = min(warmup_vec, total_vec)
+    remaining = max(total_vec - warm, 0)
+    phases = [("warmup", warm)] if warm else []
+    phases += [("train", CHUNK)] * (remaining // CHUNK)
+    if remaining % CHUNK:
+        phases.append(("train", remaining % CHUNK))
+    return phases
+
+
+def offpolicy_init_fn(env: PixelEnv, agent: Agent, cap: int) -> Callable:
+    """Pure ``(key) -> OffPolicyCarry`` — params, N reset envs, and a
+    zeroed ring of ``cap`` transitions riding in the carry."""
+    N = agent.cfg.n_envs
 
     def init(key) -> OffPolicyCarry:
         k_agent, k_env = jax.random.split(key)
@@ -155,8 +201,17 @@ def make_offpolicy_engine(env: PixelEnv, agent: Agent,
         return OffPolicyCarry(state, buf, env_states, obs,
                               quantize_obs(obs))
 
-    @functools.partial(jax.jit, static_argnames=("n_steps", "warmup"),
-                       donate_argnums=(0,))
+    return init
+
+
+def offpolicy_chunk_fn(env: PixelEnv, agent: Agent) -> Callable:
+    """Pure ``(carry, key, *, n_steps, warmup) -> (carry, r, d, metrics)``
+    body of one off-policy chunk: ``n_steps`` vectorised env steps, each
+    interleaving ``train_freq * n_envs`` sampled gradient updates."""
+    cfg = agent.cfg
+    N = cfg.n_envs
+    n_updates = cfg.train_freq * N   # keep the seed loop's 1 update/env-step
+
     def run_chunk(carry: OffPolicyCarry, key, *, n_steps: int,
                   warmup: bool):
         def step(carry, k):
@@ -192,25 +247,35 @@ def make_offpolicy_engine(env: PixelEnv, agent: Agent,
         return carry, rewards, dones, jax.tree.map(
             lambda x: x.mean(), metrics)
 
+    return run_chunk
+
+
+def make_offpolicy_engine(env: PixelEnv, agent: Agent,
+                          total_steps: int) -> Engine:
+    cfg = agent.cfg
+    # the construction-time budget: warmup sizing and the ring capacity
+    # are derived from it, so plan cannot take a different one without
+    # silently shrinking replay coverage
+    cap = offpolicy_capacity(cfg, total_steps)
+    init = offpolicy_init_fn(env, agent, cap)
+    run_chunk = jax.jit(offpolicy_chunk_fn(env, agent),
+                        static_argnames=("n_steps", "warmup"),
+                        donate_argnums=(0,))
+
     def plan():
-        # the construction-time budget: warmup sizing and the ring
-        # capacity are derived from it, so plan cannot take a different
-        # one without silently shrinking replay coverage
-        warm = min(warmup_vec, total_vec)
-        remaining = max(total_vec - warm, 0)
-        phases = [("warmup", warm)] if warm else []
-        phases += [("train", CHUNK)] * (remaining // CHUNK)
-        if remaining % CHUNK:
-            phases.append(("train", remaining % CHUNK))
-        return phases
+        return offpolicy_plan(cfg, total_steps)
 
     def run(carry, key, phase):
         kind, n_steps = phase
         return run_chunk(carry, key, n_steps=n_steps,
                          warmup=(kind == "warmup"))
 
-    return Engine(agent=agent, n_envs=N, init=init, plan=plan, run=run)
+    return Engine(agent=agent, n_envs=cfg.n_envs, init=init, plan=plan,
+                  run=run)
 
 
 __all__ = ["CHUNK", "Engine", "OffPolicyCarry", "OnPolicyCarry",
-           "make_engine", "make_onpolicy_engine", "make_offpolicy_engine"]
+           "make_engine", "make_onpolicy_engine", "make_offpolicy_engine",
+           "onpolicy_init_fn", "onpolicy_iter_fn", "onpolicy_plan",
+           "offpolicy_capacity", "offpolicy_chunk_fn", "offpolicy_init_fn",
+           "offpolicy_plan"]

@@ -12,6 +12,7 @@ Exposed as a frozen :class:`~repro.rl.agent.Agent` bundle
 from __future__ import annotations
 
 import dataclasses
+from typing import ClassVar, FrozenSet
 
 import jax
 import jax.numpy as jnp
@@ -36,15 +37,22 @@ class SACConfig:
     init_alpha: float = 0.1
     n_envs: int = 4               # parallel envs in the vectorised engine
 
+    # Fields that only feed traced arithmetic (never array shapes, scan
+    # lengths or buffer sizes), so repro.rl.population may stack them
+    # across population members and vmap over them.
+    VMAPPABLE: ClassVar[FrozenSet[str]] = frozenset(
+        {"gamma", "tau", "lr", "init_alpha"})
 
-def init_sac(key, encoder: Encoder, action_dim: int):
+
+def init_sac(key, encoder: Encoder, action_dim: int,
+             init_alpha: float = SACConfig.init_alpha):
     kg = KeyGen(key)
     params = {
         "encoder": encoder.init(kg()),
         "actor": squashed_actor_init(kg(), FEATURE_DIM, action_dim),
         "q1": q_critic_init(kg(), FEATURE_DIM, action_dim),
         "q2": q_critic_init(kg(), FEATURE_DIM, action_dim),
-        "log_alpha": jnp.log(jnp.asarray(SACConfig.init_alpha)),
+        "log_alpha": jnp.log(jnp.asarray(init_alpha)),
     }
     target = {"encoder": params["encoder"], "q1": params["q1"],
               "q2": params["q2"]}
@@ -58,7 +66,10 @@ def make_sac_agent(encoder: Encoder, action_dim: int,
     target_entropy = -float(action_dim)
 
     def init(key) -> TrainState:
-        params, target = init_sac(key, encoder, action_dim)
+        # cfg.init_alpha, not the class default: per-member population
+        # variants must actually reach the initial temperature
+        params, target = init_sac(key, encoder, action_dim,
+                                  init_alpha=cfg.init_alpha)
         return TrainState(params, target, opt.init(params))
 
     def critic_loss(params, target, batch, key):

@@ -70,6 +70,13 @@ class TrainResult:
     truncated_returns: list[float] = dataclasses.field(default_factory=list)
     env_steps: int = 0
     params: Any = None            # trained parameter pytree (TrainState.params)
+    # compile/steady split: the FIRST call of each distinct engine phase
+    # shape pays XLA compile (minutes on CPU hosts); repeated shapes run
+    # the cached program.  Reporting one blended steps/sec made the perf
+    # trajectory compile-dominated, so the driver records both.
+    compile_s: float = 0.0        # wall spent in first-call (compiling) phases
+    steady_env_steps: int = 0     # env steps from repeated (cached) phases
+    steady_wall_s: float = 0.0    # wall spent in repeated (cached) phases
 
     @property
     def all_returns(self) -> list[float]:
@@ -108,8 +115,18 @@ class TrainResult:
 
     @property
     def steps_per_sec(self) -> float:
+        """End-to-end throughput (compile included) — the cost of running
+        this condition once from scratch."""
         return self.env_steps / self.wall_time_s if self.wall_time_s > 0 \
             else float("nan")
+
+    @property
+    def steady_steps_per_sec(self) -> float:
+        """Throughput of the cached (already-compiled) phases only; NaN
+        when the run was too short for any phase shape to repeat."""
+        if self.steady_wall_s > 0 and self.steady_env_steps > 0:
+            return self.steady_env_steps / self.steady_wall_s
+        return float("nan")
 
     def summary(self) -> dict:
         return {"task": self.task, "algo": self.algo, "encoder": self.encoder,
@@ -118,7 +135,12 @@ class TrainResult:
                 "episodes_completed": len(self.episode_returns),
                 "episodes_truncated": len(self.truncated_returns),
                 "env_steps": self.env_steps,
-                "steps_per_sec": self.steps_per_sec}
+                "steps_per_sec": self.steps_per_sec,
+                "compile_s": self.compile_s,
+                # null (not NaN) in JSON artifacts when no phase repeated
+                "steady_steps_per_sec": (
+                    self.steady_steps_per_sec
+                    if np.isfinite(self.steady_steps_per_sec) else None)}
 
 
 def _track_episodes(returns_buf, ep_ret, ep_len, rewards, dones):
@@ -175,13 +197,29 @@ def train(task: str, encoder_name: str, *, total_steps: int = 20_000,
     ep_ret = np.zeros(engine.n_envs)
     ep_len = np.zeros(engine.n_envs, np.int64)
     env_steps = 0
+    compile_s = 0.0
+    steady_steps = 0
+    steady_s = 0.0
+    seen_shapes: set = set()
     t0 = time.time()
     for it, phase in enumerate(engine.plan()):
         key, sub = jax.random.split(key)
+        t_call = time.time()
         carry, rewards, dones, metrics = engine.run(carry, sub, phase)
+        rewards = np.asarray(rewards)        # blocks on the chunk
+        dt = time.time() - t_call
         ep_ret, ep_len = _track_episodes(returns, ep_ret, ep_len,
                                          rewards, dones)
-        env_steps += int(np.asarray(rewards).size)
+        chunk_steps = int(rewards.size)
+        env_steps += chunk_steps
+        # first call of a phase shape compiles a fresh XLA program;
+        # repeats run the cached one — split the wall accordingly
+        if phase in seen_shapes:
+            steady_steps += chunk_steps
+            steady_s += dt
+        else:
+            seen_shapes.add(phase)
+            compile_s += dt
         if verbose and it % log_every == 0:
             shown = " ".join(f"{k}={float(v):.3f}"
                              for k, v in sorted(metrics.items()))
@@ -190,4 +228,14 @@ def train(task: str, encoder_name: str, *, total_steps: int = 20_000,
     truncated = _flush_truncated(ep_ret, ep_len)
     return TrainResult(task, algo, encoder_name, returns,
                        time.time() - t0, truncated_returns=truncated,
-                       env_steps=env_steps, params=carry.state.params)
+                       env_steps=env_steps, params=carry.state.params,
+                       compile_s=compile_s, steady_env_steps=steady_steps,
+                       steady_wall_s=steady_s)
+
+
+def train_population(spec, **kwargs):
+    """Population driver — P members in one jitted program per static
+    shape.  Thin re-export; see :func:`repro.rl.population.train_population`
+    (imported lazily: population composes this module's helpers)."""
+    from repro.rl.population import train_population as _train_population
+    return _train_population(spec, **kwargs)

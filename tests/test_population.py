@@ -1,0 +1,286 @@
+"""Population engine + the paper's final-100-episode eval protocol.
+
+Covers: PopulationSpec member enumeration and program grouping (static
+vs VMAPPABLE overrides), the serialisation round-trip, the population
+PRNG chain, lane independence of the batched env helpers, and — the
+acceptance bar — member 0 of a population being BITWISE-equal to a
+single ``train()`` run at the same seed, hyperparameter lanes training
+independently inside one program (an lr=0 lane stays frozen at init),
+and the eval protocol replaying bitwise at a fixed seed.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs import make_pixel_env
+from repro.rl.agent import make_agent
+from repro.rl.ddpg import DDPGConfig
+from repro.rl.ppo import PPOConfig
+from repro.rl.sac import SACConfig
+from repro.rl.population import (PopulationSpec, SPEC_VERSION, evaluate,
+                                 final_100_mean, make_evaluator,
+                                 make_population_evaluator,
+                                 split_member_keys, train_population)
+from repro.rl.train import _pipeline_encoder, train
+
+# tiny off-policy config: warmup -> train transition plus real gradient
+# updates, small enough to compile fast (mirrors test_agent_engine.SMALL)
+SMALL = {"batch_size": 8, "buffer_size": 64, "learning_starts": 8,
+         "n_envs": 2}
+STEPS = 32
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# ----------------------------------------------------------------- the spec
+def test_spec_member_enumeration():
+    spec = PopulationSpec(tasks=("pendulum", "hopper"), seeds=(0, 7),
+                          variants=({"lr": 1e-3}, {"lr": 1e-4}))
+    assert spec.n_members == 8
+    members = spec.members()
+    assert [m.index for m in members] == list(range(8))
+    # task-major, then variant, then seed
+    assert [(m.task, m.variant_index, m.seed) for m in members[:4]] == [
+        ("pendulum", 0, 0), ("pendulum", 0, 7),
+        ("pendulum", 1, 0), ("pendulum", 1, 7)]
+    assert members[4].task == "hopper" and members[4].algo == "sac"
+    assert members[0].algo == "ddpg"
+
+
+def test_spec_canonicalisation():
+    # a single task string, dict variants and pair variants all normalise
+    a = PopulationSpec(tasks="pendulum", seeds=(0,),
+                       variants=({"lr": 1e-3, "gamma": 0.9},))
+    b = PopulationSpec(tasks=("pendulum",), seeds=(0,),
+                       variants=((("gamma", 0.9), ("lr", 1e-3)),))
+    assert a == b
+    with pytest.raises(ValueError, match="unknown task"):
+        PopulationSpec(tasks=("cartpole",), seeds=(0,))
+    with pytest.raises(ValueError, match="seed"):
+        PopulationSpec(tasks=("pendulum",), seeds=())
+
+
+def test_spec_roundtrip_and_version():
+    spec = PopulationSpec(tasks=("pendulum",), seeds=(0, 1),
+                          variants=({"lr": 1e-3}, {}),
+                          total_steps=64, cfg_overrides={"n_envs": 2})
+    assert PopulationSpec.from_dict(spec.to_dict()) == spec
+    stale = spec.to_dict()
+    stale["version"] = SPEC_VERSION + 1
+    with pytest.raises(ValueError, match="version"):
+        PopulationSpec.from_dict(stale)
+
+
+def test_programs_static_vs_vmappable():
+    # lr is VMAPPABLE -> both variants share ONE program with an lr column
+    spec = PopulationSpec(tasks=("pendulum",), seeds=(0,),
+                          variants=({"lr": 1e-3}, {"lr": 0.0}),
+                          cfg_overrides=SMALL)
+    progs = spec.programs()
+    assert len(progs) == 1
+    assert progs[0].hyper_fields == ("lr",)
+    np.testing.assert_array_equal(
+        np.asarray(progs[0].hyper_arrays()["lr"]),
+        np.float32([1e-3, 0.0]))
+
+    # batch_size is static (a shape) -> the program splits
+    spec = PopulationSpec(tasks=("pendulum",), seeds=(0,),
+                          variants=({"batch_size": 8}, {"batch_size": 16}),
+                          cfg_overrides=SMALL)
+    assert len(spec.programs()) == 2
+
+    # tasks never share a program (different envs / algorithms)
+    spec = PopulationSpec(tasks=("pendulum", "hopper"), seeds=(0,))
+    assert len(spec.programs()) == 2
+
+    with pytest.raises(ValueError, match="no field"):
+        PopulationSpec(tasks=("pendulum",), seeds=(0,),
+                       variants=({"learning_rate": 1e-3},)).programs()
+
+
+def test_vmappable_declared():
+    for cls, expect in ((PPOConfig, {"lr", "gamma", "clip_eps"}),
+                        (SACConfig, {"lr", "gamma", "tau"}),
+                        (DDPGConfig, {"lr", "gamma", "action_noise"})):
+        fields = {f.name for f in dataclasses.fields(cls)}
+        assert expect <= cls.VMAPPABLE <= fields
+        # shape-bearing fields must never be marked vmappable
+        assert not {"n_envs", "batch_size", "buffer_size"} & cls.VMAPPABLE
+
+
+def test_final_100_mean():
+    assert np.isnan(final_100_mean([]))
+    assert final_100_mean([1.0, 2.0, 3.0]) == 2.0
+    # >100 episodes: only the last 100 count (the paper's "Final")
+    r = [0.0] * 50 + [2.0] * 100
+    assert final_100_mean(r) == 2.0
+
+
+# ------------------------------------------------------- PRNG + env batching
+def test_split_member_keys_matches_single_split():
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in (0, 3, 11)])
+    a, b = split_member_keys(keys)
+    for p in range(3):
+        ea, eb = jax.random.split(keys[p])
+        assert np.array_equal(np.asarray(a[p]), np.asarray(ea))
+        assert np.array_equal(np.asarray(b[p]), np.asarray(eb))
+
+
+def test_population_env_batches_are_lane_independent():
+    env = make_pixel_env("pendulum", train=True)
+    P, N = 2, 2
+    keys = jnp.stack([jax.random.split(jax.random.PRNGKey(s), N)
+                      for s in (0, 1)])
+    states, obs = env.reset_population(keys)
+    assert obs.shape[:2] == (P, N)
+    actions = jnp.zeros((P, N, env.action_dim)).at[1].set(0.5)
+    states2, obs2, rew, done = env.step_population(states, actions)
+    # each lane is exactly the per-member batched env
+    for p in range(P):
+        s_ref, o_ref = env.reset_batch(keys[p])
+        assert _tree_equal(o_ref, obs[p])
+        _, o2_ref, r_ref, d_ref = env.step_batch(s_ref, actions[p])
+        assert _tree_equal(o2_ref, obs2[p])
+        assert np.array_equal(np.asarray(r_ref), np.asarray(rew[p]))
+
+
+# ------------------------------------------------- training parity (bitwise)
+@pytest.fixture(scope="module")
+def pop_run():
+    """P=2 seeds, WITH gradient updates, plus the protocol eval on a
+    shortened window — shared by the parity/eval/e2e tests below."""
+    spec = PopulationSpec(tasks=("pendulum",), seeds=(0, 1),
+                          total_steps=STEPS, cfg_overrides=SMALL)
+    return train_population(spec, eval_episodes=4, eval_max_steps=8)
+
+
+@pytest.fixture(scope="module")
+def single_run():
+    return train("pendulum", "miniconv4", total_steps=STEPS, seed=0,
+                 cfg=DDPGConfig(**SMALL))
+
+
+@pytest.mark.slow
+def test_member0_bitwise_equals_single_run(pop_run, single_run):
+    """The acceptance bar: exact lane mode reproduces ``train()`` at the
+    same seed bitwise — params AND the episode-return stream."""
+    m0, m1 = pop_run.members[0], pop_run.members[1]
+    assert _tree_equal(m0.params, single_run.params)
+    assert m0.episode_returns == single_run.episode_returns
+    assert m0.truncated_returns == single_run.truncated_returns
+    assert m0.env_steps == single_run.env_steps
+    # and the other seed genuinely trained a different agent
+    assert not _tree_equal(m1.params, single_run.params)
+
+
+@pytest.mark.slow
+def test_hyper_lanes_train_independently():
+    """One program, two lr lanes: the lr=0 lane must end bitwise at its
+    init params while the lr>0 lane moves — hyperparameters really flow
+    through the traced update, per member."""
+    spec = PopulationSpec(tasks=("pendulum",), seeds=(0,),
+                          variants=({"lr": 1e-3}, {"lr": 0.0}),
+                          total_steps=STEPS, cfg_overrides=SMALL)
+    assert len(spec.programs()) == 1
+    res = train_population(spec, eval_episodes=0)
+    # reference init params: the driver's chain is seed -> (k_init, _) and
+    # the engine init splits again into (k_agent, k_env) before agent.init
+    env = make_pixel_env("pendulum", train=True)
+    enc = _pipeline_encoder("miniconv4", env.obs_shape[-1])
+    agent = make_agent("ddpg", enc, env.action_dim, cfg=DDPGConfig(**SMALL))
+    k_init, _ = jax.random.split(jax.random.PRNGKey(0))
+    k_agent, _ = jax.random.split(k_init)
+    init_params = agent.init(k_agent).params
+    frozen = res.members[1]      # variant 1 = lr 0.0
+    trained = res.members[0]     # variant 0 = lr 1e-3
+    assert _tree_equal(frozen.params, init_params)
+    assert not _tree_equal(trained.params, init_params)
+
+
+@pytest.mark.slow
+def test_onpolicy_population_parity():
+    """The on-policy (PPO) lane path: member 0 bitwise vs train()."""
+    ppo = {"n_envs": 2, "n_steps": 4, "n_epochs": 1, "n_minibatches": 2}
+    spec = PopulationSpec(tasks=("walker",), seeds=(0, 1), total_steps=16,
+                          cfg_overrides=ppo)
+    res = train_population(spec, eval_episodes=0)
+    single = train("walker", "miniconv4", total_steps=16, seed=0,
+                   cfg=PPOConfig(**ppo))
+    assert _tree_equal(res.members[0].params, single.params)
+    assert res.members[0].truncated_returns == single.truncated_returns
+
+
+# ----------------------------------------------------------- eval protocol
+@pytest.mark.slow
+def test_evaluate_bitwise_replay(pop_run):
+    env = make_pixel_env("pendulum", train=False)
+    enc = _pipeline_encoder("miniconv4", env.obs_shape[-1])
+    agent = make_agent("ddpg", enc, env.action_dim)
+    params = pop_run.members[0].params
+    r1 = evaluate(agent, params, 4, env=env, seed=5, max_steps=8)
+    r2 = evaluate(agent, params, 4, env=env, seed=5, max_steps=8)
+    assert r1.shape == (4,)
+    assert np.array_equal(r1, r2)
+    # a different seed draws different episodes
+    r3 = evaluate(agent, params, 4, env=env, seed=6, max_steps=8)
+    assert not np.array_equal(r1, r3)
+    with pytest.raises(ValueError, match="env= or task="):
+        evaluate(agent, params, 4)
+
+
+@pytest.mark.slow
+def test_population_evaluator_lanes(pop_run):
+    """Exact-mode rows equal the single evaluator, and permuting members
+    permutes rows bitwise (lanes never interact)."""
+    env = make_pixel_env("pendulum", train=False)
+    enc = _pipeline_encoder("miniconv4", env.obs_shape[-1])
+    agent = make_agent("ddpg", enc, env.action_dim)
+    m0, m1 = pop_run.members[0], pop_run.members[1]
+    key = jax.random.PRNGKey(2)
+
+    stack = lambda a, b: jax.tree.map(
+        lambda x, y: jnp.stack([x, y]), a, b)
+    pop_eval = make_population_evaluator(env, agent, 4, max_steps=8)
+    fwd = np.asarray(pop_eval(stack(m0.params, m1.params), key))
+    rev = np.asarray(pop_eval(stack(m1.params, m0.params), key))
+    assert np.array_equal(fwd[0], rev[1]) and np.array_equal(fwd[1], rev[0])
+
+    single = make_evaluator(env, agent, 4, max_steps=8)
+    ref0 = np.asarray(single(m0.params, key))
+    assert np.array_equal(fwd[0], ref0)
+
+
+@pytest.mark.slow
+def test_population_end_to_end(pop_run):
+    """Eval'd members carry the protocol metric; the winner exports
+    straight into the serving pipeline."""
+    from repro.deploy import Deployment, DeploymentConfig
+    assert all(m.eval_returns is not None and m.eval_returns.shape == (4,)
+               for m in pop_run.members)
+    assert all(np.isfinite(m.final_100_mean) for m in pop_run.members)
+    best = pop_run.best_member()
+    assert best.final_100_mean == max(m.final_100_mean
+                                      for m in pop_run.members)
+    summ = pop_run.summary()
+    assert summ["best_member"] == best.index
+    assert summ["n_programs"] == 1
+
+    env = make_pixel_env("pendulum", train=False)
+    cfg = DeploymentConfig.from_encoder_name("miniconv4",
+                                             c_in=env.obs_shape[-1])
+    dep = Deployment.build(cfg)
+    agent = make_agent("ddpg", dep.encoder, env.action_dim)
+    client, server = dep.export_best(pop_run,
+                                     head=agent.policy_head(best.params))
+    _, obs = env.reset(jax.random.PRNGKey(0))
+    action = np.asarray(server.serve([client.encode_fn(obs[None])])[0])
+    assert action.shape == (env.action_dim,)
+    assert np.all(np.isfinite(action))
